@@ -1,0 +1,72 @@
+"""Paper Fig. 8 / Table II: peak device memory vs #partitions.
+
+Memory is the array-accurate device-buffer model of
+``repro.core.pipeline.memory_model_bytes`` (CPU container: no CUDA
+allocator to poll; the counted buffers are exactly the arrays the
+inference step allocates).
+
+    PYTHONPATH=src python -m benchmarks.bench_memory [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import print_table, save_table, trained_params
+from repro.core import pipeline as P
+
+
+def run(datasets, bits_list, partitions, batch=1, epochs=200):
+    rows = []
+    for ds in datasets:
+        params = trained_params(ds, 8, epochs)
+        for bits in bits_list:
+            base = None
+            for parts in partitions:
+                r = P.run_pipeline(
+                    P.PipelineConfig(
+                        dataset=ds, bits=bits, batch=batch,
+                        num_partitions=parts, regrow=True,
+                    ),
+                    params,
+                )
+                if base is None:
+                    base = r.unpartitioned_memory_bytes
+                rows.append(
+                    {
+                        "dataset": ds,
+                        "bits": bits,
+                        "batch": batch,
+                        "partitions": parts,
+                        "peak_MB": round(r.peak_memory_bytes / 1e6, 2),
+                        "reduction_%": round(
+                            100 * (1 - r.peak_memory_bytes / base), 2
+                        ),
+                        "nodes": r.num_nodes,
+                        "edges": r.num_edges,
+                    }
+                )
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    if args.quick:
+        rows = run(["csa"], [32], [1, 4, 16], epochs=150)
+    else:
+        rows = run(["csa", "booth", "mapped"], [32, 64], [1, 2, 4, 8, 16, 32])
+        rows += run(["csa"], [64], [1, 8, 16], batch=4)
+    print_table("memory vs partitions (paper Fig. 8 / Table II)", rows)
+    save_table("memory", rows)
+    best = max(rows, key=lambda r: r["reduction_%"])
+    print(
+        f"\nmax memory reduction: {best['reduction_%']}% "
+        f"({best['dataset']}-{best['bits']}b @ {best['partitions']} parts; "
+        f"paper: 59.38% on csa-1024 x16)"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

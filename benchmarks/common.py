@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: trained-model cache, timing, table output."""
+from __future__ import annotations
+
+import functools
+import json
+import time
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+
+@functools.lru_cache(maxsize=8)
+def trained_params(dataset: str = "csa", bits: int = 8, epochs: int = 300):
+    from repro.core import pipeline as P
+
+    params, _ = P.train_model(dataset, bits, epochs=epochs)
+    return params
+
+
+def timer(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def save_table(name: str, rows: list):
+    ART.mkdir(parents=True, exist_ok=True)
+    path = ART / f"{name}.json"
+    path.write_text(json.dumps(rows, indent=1))
+    return path
+
+
+def print_table(title: str, rows: list):
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(empty)")
+        return
+    keys = list(rows[0].keys())
+    print(" | ".join(f"{k:>14s}" for k in keys))
+    for r in rows:
+        print(
+            " | ".join(
+                f"{r[k]:14.4f}" if isinstance(r[k], float) else f"{str(r[k]):>14s}"
+                for k in keys
+            )
+        )

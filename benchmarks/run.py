@@ -1,0 +1,55 @@
+"""Benchmark orchestrator: one suite per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is the quick pass (CI-sized); --full reproduces the wider grids.
+The multi-pod dry-run + roofline tables are separate entry points
+(python -m repro.launch.dryrun / python -m repro.roofline.report) since
+they re-initialise jax with 512 host devices.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    quick = [] if args.full else ["--quick"]
+
+    from benchmarks import (
+        bench_accuracy,
+        bench_features,
+        bench_memory,
+        bench_spmm,
+        bench_verification,
+    )
+
+    t0 = time.time()
+    suites = [
+        ("accuracy (Fig. 6/7)", bench_accuracy.main),
+        ("memory (Fig. 8 / Table II)", bench_memory.main),
+        ("spmm kernels (Fig. 9)", bench_spmm.main),
+        ("verification runtime (Fig. 10)", bench_verification.main),
+        ("feature ablation (§III-B)", bench_features.main),
+    ]
+    failed = []
+    for name, fn in suites:
+        print(f"\n#### {name} ####", flush=True)
+        try:
+            fn(quick)
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, repr(e)))
+            print(f"[FAIL] {name}: {e}")
+    print(f"\nbenchmarks done in {time.time()-t0:.1f}s")
+    if failed:
+        for name, err in failed:
+            print(f"FAILED: {name}: {err}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Serving example: batched prefill + greedy decode with KV caches, on a
+reduced qwen3 config — the same serve_step the decode_32k/long_500k
+dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.configs.base import materialize, model_spec_tree
+from repro.serving.decode import greedy_generate, make_prefill_step, make_serve_step
+
+cfg = get_config("qwen3-8b", smoke=True)
+params = materialize(model_spec_tree(cfg), jax.random.key(0), jnp.float32)
+
+B, S_PROMPT, STEPS = 4, 24, 16
+rng = np.random.default_rng(0)
+prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S_PROMPT)), jnp.int32)
+
+print(f"prefill: batch={B} prompt_len={S_PROMPT}")
+prefill = jax.jit(make_prefill_step(cfg, S_PROMPT + STEPS))
+serve = jax.jit(make_serve_step(cfg))
+
+t0 = time.perf_counter()
+last_logits, cache = prefill(params, prompt)
+tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
+print(f"  prefill done in {time.perf_counter()-t0:.2f}s (incl. compile)")
+
+outs = [tok]
+t0 = time.perf_counter()
+for i in range(STEPS - 1):
+    tok, _, cache = serve(params, cache, tok)
+    outs.append(tok)
+dt = time.perf_counter() - t0
+gen = jnp.concatenate(outs, axis=1)
+print(f"decoded {STEPS-1} steps x {B} seqs in {dt:.2f}s "
+      f"({(STEPS-1)*B/dt:.1f} tok/s incl. compile)")
+print("generated ids:\n", np.asarray(gen))
+
+# consistency: the scan-based reference generator matches the step loop
+ref = greedy_generate(params, cfg, prompt, steps=STEPS, max_seq=S_PROMPT + STEPS)
+assert np.array_equal(np.asarray(ref)[:, :gen.shape[1]], np.asarray(gen)), (
+    "scan generator disagrees with step loop"
+)
+print("scan-generator consistency: OK")

@@ -1,0 +1,101 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on the synthetic structured token stream, with the full
+production machinery — sharded params (data x model host mesh), remat,
+microbatching, async checkpointing, straggler monitor, resume-on-restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(On 1 CPU device the mesh is 1x1; the same script drives the production
+mesh via --mesh pod on a real cluster — see repro/launch/train.py.)
+"""
+import argparse
+import dataclasses
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import ModelConfig, materialize, model_spec_tree
+from repro.distributed.fault_tolerance import ResilientLoop
+from repro.launch.mesh import make_host_mesh
+from repro.sharding.rules import make_rules, tree_shardings, use_sharding
+from repro.training import optimizer as opt_mod
+from repro.training.data import TokenStream, TokenStreamConfig
+from repro.training.train_step import make_train_step
+
+
+def lm100m(layers: int = 10, dim: int = 768) -> ModelConfig:
+    """~100M params at the defaults, qwen3 family (qk-norm + GQA).
+    (--layers/--dim shrink it for 1-core CI validation.)"""
+    heads = max(dim // 64, 2)
+    return ModelConfig(
+        name="qwen3-100m", family="dense",
+        num_layers=layers, d_model=dim, num_heads=heads,
+        num_kv_heads=max(heads // 3, 1),
+        d_ff=4 * dim, vocab_size=8192, qk_norm=True, rope_theta=1e6,
+        tie_embeddings=False, layer_pattern=("global",),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--layers", type=int, default=10)
+    ap.add_argument("--dim", type=int, default=768)
+    args = ap.parse_args()
+
+    cfg = lm100m(args.layers, args.dim)
+    mesh = make_host_mesh()
+    rules = make_rules(mesh)
+    spec = model_spec_tree(cfg)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="lm100m_ckpt_")
+
+    with use_sharding(mesh):
+        params = jax.device_put(
+            materialize(spec, jax.random.key(0), jnp.float32),
+            tree_shardings(spec, mesh, rules),
+        )
+        n = sum(x.size for x in jax.tree.leaves(params))
+        print(f"model: {n/1e6:.1f}M params on mesh {dict(mesh.shape)}")
+
+        opt = opt_mod.AdamW(lr=3e-4, weight_decay=0.01)
+        opt_state = opt.init(params)
+        step_fn = jax.jit(
+            make_train_step(cfg, opt, microbatches=2), donate_argnums=(0, 1)
+        )
+
+        def loop_step(state, batch):
+            p, o = state
+            p, o, m = step_fn(p, o, {"tokens": jnp.asarray(batch)})
+            return (p, o), m
+
+        stream = TokenStream(
+            TokenStreamConfig(cfg.vocab_size, args.seq, args.batch, structure=8)
+        )
+        loop = ResilientLoop(
+            loop_step, (params, opt_state), ckpt_dir=ckpt_dir, ckpt_every=100
+        )
+        if loop.resumed:
+            print(f"resumed at step {loop.step}")
+        first = last = None
+        batches = (stream.batch_at(s) for s in range(loop.step, args.steps))
+        for step, metrics in loop.run(batches, steps=args.steps):
+            loss = float(metrics["loss"])
+            first = loss if first is None else first
+            last = loss
+            if step % 20 == 0:
+                print(f"step {step:4d}  loss {loss:.4f}", flush=True)
+        print(f"\nloss {first:.3f} -> {last:.3f} "
+              f"(structured stream entropy floor ~ corruption rate)")
+        print(f"checkpoints in {ckpt_dir}; stragglers: {len(loop.stragglers)}")
+        assert last < first * 0.7, "training did not learn"
+
+
+if __name__ == "__main__":
+    main()

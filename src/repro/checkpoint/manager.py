@@ -1,0 +1,169 @@
+"""Fault-tolerant checkpointing: async, atomic, reshard-on-restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000120.tmp/           written first
+        shard_<host>.npz             flat leaf arrays (this host's shards)
+        manifest.json                treedef + leaf shapes/dtypes + step
+    <dir>/step_000120/               atomic rename when complete
+
+Guarantees used by the restart path:
+  * a checkpoint directory either has its final name and is complete, or
+    is a ``.tmp`` (crashed mid-write) and is ignored/garbage-collected;
+  * ``restore`` loads the newest complete step and re-shards every leaf
+    onto the CURRENT mesh (``jax.device_put`` with the target sharding),
+    so restarts may change topology (elastic restart: e.g. 512 -> 256
+    chips after losing a pod);
+  * saving runs on a background thread (compute is not blocked by I/O);
+    ``wait()`` joins before the next save so at most one write is in
+    flight.
+
+On multi-host deployments each host writes only the addressable shards of
+its arrays; this CPU container acts as host 0 of 1.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree) -> list:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        out.append((name, leaf))
+    return out
+
+
+def save(tree, directory: str | os.PathLike, step: int, *, host_id: int = 0):
+    """Synchronous atomic save of a pytree."""
+    d = Path(directory)
+    final = d / f"step_{step:09d}"
+    tmp = d / (final.name + ".tmp")
+    tmp.mkdir(parents=True, exist_ok=True)
+
+    named = _flatten_with_names(tree)
+    arrays = {}
+    manifest = {"step": step, "leaves": [], "hosts": 1}
+    for i, (name, leaf) in enumerate(named):
+        arr = np.asarray(leaf)
+        key = f"leaf_{i:05d}"
+        arrays[key] = arr
+        manifest["leaves"].append(
+            {"key": key, "name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+    np.savez(tmp / f"shard_{host_id}.npz", **arrays)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+    return final
+
+
+def latest_step(directory: str | os.PathLike) -> Optional[int]:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = []
+    for p in d.iterdir():
+        if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp"):
+            if (p / "manifest.json").exists():
+                steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(
+    like_tree,
+    directory: str | os.PathLike,
+    *,
+    step: Optional[int] = None,
+    shardings: Any = None,
+):
+    """Load a checkpoint into the structure of ``like_tree``.
+
+    ``shardings``: optional pytree of NamedSharding for the CURRENT mesh —
+    every leaf is re-laid-out via device_put (elastic reshard-on-restore).
+    Returns (tree, step).
+    """
+    d = Path(directory)
+    step = step if step is not None else latest_step(d)
+    if step is None:
+        raise FileNotFoundError(f"no complete checkpoint under {d}")
+    final = d / f"step_{step:09d}"
+    manifest = json.loads((final / "manifest.json").read_text())
+    data = np.load(final / "shard_0.npz")
+    leaves = [data[entry["key"]] for entry in manifest["leaves"]]
+
+    flat_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    assert len(flat_like) == len(leaves), (
+        f"checkpoint has {len(leaves)} leaves, target tree {len(flat_like)}"
+    )
+    shard_flat = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else None
+    )
+    out = []
+    for i, (like, arr) in enumerate(zip(flat_like, leaves)):
+        arr = arr.astype(like.dtype) if hasattr(like, "dtype") else arr
+        if shard_flat is not None:
+            out.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class CheckpointManager:
+    """Async manager: save() snapshots to host memory and writes on a
+    background thread; keeps the newest ``keep`` checkpoints."""
+
+    def __init__(self, directory: str | os.PathLike, *, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.save_count = 0
+        self.last_error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def save_async(self, tree, step: int):
+        self.wait()
+        # snapshot to host memory NOW (device buffers may be donated later)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save(host_tree, self.directory, step)
+                self._gc()
+                self.save_count += 1
+            except BaseException as e:  # noqa: BLE001
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            p for p in self.directory.iterdir()
+            if p.is_dir() and p.name.startswith("step_")
+        )
+        complete = [p for p in steps if not p.name.endswith(".tmp")]
+        for p in complete[: -self.keep]:
+            shutil.rmtree(p, ignore_errors=True)
+        # orphaned tmp dirs from crashes
+        for p in steps:
+            if p.name.endswith(".tmp") and time.time() - p.stat().st_mtime > 300:
+                shutil.rmtree(p, ignore_errors=True)

@@ -1,0 +1,71 @@
+"""The assigned input-shape set (LM-family: seq_len x global_batch) and
+ShapeDtypeStruct input specs per (arch, shape).
+
+  train_4k      seq 4,096    batch 256   -> train_step
+  prefill_32k   seq 32,768   batch 32    -> prefill_step
+  decode_32k    seq 32,768   batch 128   -> serve_step (1 new token)
+  long_500k     seq 524,288  batch 1     -> serve_step (sub-quadratic only)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _enc_spec(cfg: ModelConfig, batch: int):
+    """Stub modality frontend: precomputed frame/patch embeddings."""
+    s_enc = cfg.encoder_seq or cfg.cross_seq
+    if not s_enc:
+        return None
+    return jax.ShapeDtypeStruct((batch, s_enc, cfg.d_model), jnp.bfloat16)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape.
+
+    For decode shapes the KV-cache/state specs are derived with
+    ``jax.eval_shape`` over the cache initialiser — weak-type-correct and
+    allocation-free.
+    """
+    sh = SHAPES[shape_name]
+    b, s = sh.global_batch, sh.seq_len
+    tok = jnp.int32
+    if sh.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s + 1), tok)}
+    elif sh.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
+    else:  # decode: one new token against a cache of seq_len
+        from repro.models.transformer import init_cache_tree
+
+        cache = jax.eval_shape(
+            lambda: init_cache_tree(cfg, b, s, dtype=jnp.bfloat16)
+        )
+        specs = {"token": jax.ShapeDtypeStruct((b, 1), tok), "cache": cache}
+    enc = _enc_spec(cfg, b)
+    if enc is not None and sh.kind != "decode":
+        specs["enc_input"] = enc
+    return specs
+
+
+def supported_shapes(cfg: ModelConfig) -> list:
+    return [k for k in SHAPES if k not in cfg.skip_shapes]

@@ -1,0 +1,89 @@
+"""GROOT's 4-bit node features (§III-B) + GAMORA's 3-bit baseline features.
+
+Feature layout (one bit per column, float32 0/1):
+
+  bits[0:2]  node type:     PI -> 00,  internal AND -> 11,  PO -> 0X
+             (X = polarity of the PO's single driving edge)
+  bits[2:4]  input polarity: AND -> (left_inverted, right_inverted)
+             PI -> 00;  PO -> 11  (the paper's worked example: PO m0 = 0011)
+
+This reproduces the paper's vector table exactly:
+  node 5  (AND, both inputs non-inv)  -> 1100
+  node 10 (AND, both inputs inverted) -> 1111
+  node 1  (PI)                        -> 0000
+  node 15 (PO, non-inverted driver)   -> 0011
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import aig as A
+
+
+def groot_features(design) -> np.ndarray:
+    """4-bit GROOT features for an AIG (or LUTGraph, which generalizes)."""
+    if isinstance(design, A.AIG):
+        n = design.num_nodes
+        feat = np.zeros((n, 4), dtype=np.float32)
+        is_and = design.kind == A.AND
+        is_po = design.kind == A.PO
+        # type bits
+        feat[is_and, 0] = 1.0
+        feat[is_and, 1] = 1.0
+        feat[is_po, 1] = (design.fanin0[is_po] & 1).astype(np.float32)  # 0X
+        # polarity bits
+        feat[is_and, 2] = (design.fanin0[is_and] & 1).astype(np.float32)
+        feat[is_and, 3] = (design.fanin1[is_and] & 1).astype(np.float32)
+        feat[is_po, 2] = 1.0
+        feat[is_po, 3] = 1.0
+        return feat
+    # LUTGraph: type bits as for AIG; polarity bits = (any leaf inverted,
+    # all leaves inverted) aggregated over the LUT cone's boundary edges.
+    n = design.num_nodes
+    feat = np.zeros((n, 4), dtype=np.float32)
+    is_and = design.kind == A.AND
+    is_po = design.kind == A.PO
+    feat[is_and, 0] = 1.0
+    feat[is_and, 1] = 1.0
+    inv_any = np.zeros(n, dtype=bool)
+    inv_all = np.ones(n, dtype=bool)
+    np.logical_or.at(inv_any, design.edge_dst, design.edge_inv)
+    np.logical_and.at(inv_all, design.edge_dst, design.edge_inv)
+    has_in = np.zeros(n, dtype=bool)
+    has_in[design.edge_dst] = True
+    inv_all &= has_in
+    feat[is_po, 1] = inv_any[is_po].astype(np.float32)
+    feat[is_and, 2] = inv_any[is_and].astype(np.float32)
+    feat[is_and, 3] = inv_all[is_and].astype(np.float32)
+    feat[is_po, 2] = 1.0
+    feat[is_po, 3] = 1.0
+    return feat
+
+
+def gamora_features(design) -> np.ndarray:
+    """The 3-feature baseline of GAMORA [7]: (node type as one value,
+    #inverted fanins, #fanins) — PI/PO not distinguished, the gap the paper
+    calls out.  Used for the feature-ablation benchmark."""
+    if isinstance(design, A.AIG):
+        n = design.num_nodes
+        feat = np.zeros((n, 3), dtype=np.float32)
+        is_and = design.kind == A.AND
+        feat[is_and, 0] = 1.0  # "gate" vs "terminal" — PI and PO collapse to 0
+        n_inv = (design.fanin0 & 1) + (design.fanin1 & 1)
+        feat[is_and, 1] = n_inv[is_and].astype(np.float32)
+        is_po = design.kind == A.PO
+        feat[is_po, 1] = (design.fanin0[is_po] & 1).astype(np.float32)
+        feat[is_and, 2] = 2.0
+        feat[is_po, 2] = 1.0
+        return feat
+    n = design.num_nodes
+    feat = np.zeros((n, 3), dtype=np.float32)
+    is_and = design.kind == A.AND
+    feat[is_and, 0] = 1.0
+    ninv = np.zeros(n, dtype=np.float32)
+    np.add.at(ninv, design.edge_dst, design.edge_inv.astype(np.float32))
+    deg = np.zeros(n, dtype=np.float32)
+    np.add.at(deg, design.edge_dst, 1.0)
+    feat[:, 1] = ninv
+    feat[:, 2] = deg
+    return feat

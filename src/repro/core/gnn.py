@@ -1,0 +1,295 @@
+"""GraphSAGE for AIG node classification (paper §III-C/D), in JAX.
+
+Direction- and polarity-separated SAGE: each layer aggregates three
+neighbourhoods with separate weights — non-inverted fanin edges, inverted
+fanin edges, and fanout edges.  (AIGs are DAGs: a node's function-root
+pattern lives in its *fanin* cone, and the paper's core domain insight is
+that the *polarity* of input connections identifies XOR/MAJ structures.)
+
+    h'_u = act( W_s h_u + W_in+ mean_{v->u, pos} h_v
+                        + W_in- mean_{v->u, inv} h_v
+                        + W_out mean_{u->v} h_v + b )
+
+Aggregation (the SpMM that dominates runtime, §IV) is pluggable:
+``aggregate_fn(x, edge_src, edge_dst, num_nodes, w=None)`` — pure-jnp
+segment ops (ref), the Pallas GROOT kernel, or the XLA one-hot
+formulation.  Inference on partitioned graphs runs per-subgraph and reads
+back core-node rows only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aig as A
+from repro.core.graph import EdgeGraph
+from repro.core.regrowth import Subgraph
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    in_features: int = 4
+    hidden: int = 32
+    num_layers: int = 4
+    num_classes: int = A.NUM_CLASSES
+    dtype: str = "float32"
+
+
+IN_GROUPS = ("w_in_l_pos", "w_in_l_neg", "w_in_r_pos", "w_in_r_neg")
+OUT_GROUPS = ("w_out_pos", "w_out_neg")
+
+
+def init_params(cfg: GNNConfig, key) -> dict:
+    dims = [cfg.in_features] + [cfg.hidden] * cfg.num_layers
+    params = {"layers": []}
+    for i in range(cfg.num_layers):
+        names = ("w_self",) + IN_GROUPS + OUT_GROUPS
+        key, *keys = jax.random.split(key, 1 + len(names))
+        s = 1.0 / np.sqrt(dims[i])
+        layer = {
+            nm: jax.random.uniform(kk, (dims[i], dims[i + 1]), jnp.float32, -s, s)
+            for nm, kk in zip(names, keys)
+        }
+        layer["b"] = jnp.zeros((dims[i + 1],), jnp.float32)
+        params["layers"].append(layer)
+    key, kh = jax.random.split(key)
+    s = 1.0 / np.sqrt(cfg.hidden)
+    params["head"] = {
+        "w": jax.random.uniform(kh, (cfg.hidden, cfg.num_classes), jnp.float32, -s, s),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Aggregation backends.  Signature:
+#   agg(x, edge_src, edge_dst, num_nodes, w=None) ->
+#       sum over incoming edges of w_e * x[src] per dst row.
+# ---------------------------------------------------------------------------
+
+def segment_sum_agg(x, edge_src, edge_dst, num_nodes, w=None):
+    """Reference: gather + segment-sum (what PyG/GNNAdvisor-style row
+    parallel SpMM computes)."""
+    msgs = x[edge_src]
+    if w is not None:
+        msgs = msgs * w[:, None]
+    return jax.ops.segment_sum(msgs, edge_dst, num_segments=num_nodes)
+
+
+def forward(
+    params,
+    x,
+    edge_src,
+    edge_dst,
+    edge_inv=None,
+    edge_slot=None,
+    *,
+    num_nodes: int,
+    agg=None,
+):
+    """Full forward pass -> logits (num_nodes, num_classes).
+
+    In-edges are aggregated in four (slot x polarity) groups.  Each AIG node
+    has at most one edge per group, so group aggregation is *exact* ordered
+    message passing (no mean washout) while remaining an SpMM — the same
+    kernel serves all groups (weights select the group) plus the fanout
+    direction, which is where the HD/LD degree polarization lives.
+
+    ``agg`` is an :class:`repro.kernels.ops.AggPair` (or None for the
+    segment-sum reference).  When the pair exposes a fused
+    aggregate+matmul (``in_agg_mm``), the per-group ``(agg*norm) @ W`` is
+    folded into the kernel (weights pre-scaled by the norm would be wrong
+    since the norm is per-*destination*; instead we post-scale — the fused
+    path therefore computes agg @ W and we fold the norm into the edge
+    weights, which IS per-destination exact because every edge's
+    destination norm is known per edge).
+    """
+    one = jnp.ones_like(edge_dst, dtype=x.dtype)
+    w_neg = edge_inv.astype(x.dtype) if edge_inv is not None else jnp.zeros_like(one)
+    w_pos = 1.0 - w_neg
+    w_r = edge_slot.astype(x.dtype) if edge_slot is not None else jnp.zeros_like(one)
+    w_l = 1.0 - w_r
+    group_w = {
+        "w_in_l_pos": w_l * w_pos,
+        "w_in_l_neg": w_l * w_neg,
+        "w_in_r_pos": w_r * w_pos,
+        "w_in_r_neg": w_r * w_neg,
+    }
+    out_w = {"w_out_pos": w_pos, "w_out_neg": w_neg}
+    deg = lambda idx, w: jax.ops.segment_sum(w, idx, num_segments=num_nodes)
+    # Mean normalisation: 1/deg per DESTINATION row.  Two equivalent
+    # placements: post-scale the aggregated row ((N,1) elementwise — the
+    # default: under SPMD a per-edge gather of the (N,) norm array forces
+    # a 0.7 GB all-gather per group, measured in §Perf), or fold into the
+    # edge weights (w_e /= deg(dst_e)) — required by the fused kernel,
+    # which never materialises the aggregated row.
+    norm_in = {
+        nm: (1.0 / jnp.maximum(deg(edge_dst, w), 1.0))[:, None]
+        for nm, w in group_w.items()
+    }
+    norm_out = {
+        nm: (1.0 / jnp.maximum(deg(edge_src, w), 1.0))[:, None]
+        for nm, w in out_w.items()
+    }
+
+    if agg is None:
+        in_agg = lambda h, w: segment_sum_agg(h, edge_src, edge_dst, num_nodes, w)
+        out_agg = lambda h, w: segment_sum_agg(h, edge_dst, edge_src, num_nodes, w)
+        in_agg_mm = None
+    else:
+        in_agg, out_agg, in_agg_mm = agg.in_agg, agg.out_agg, agg.in_agg_mm
+
+    if in_agg_mm is not None:  # fused path: fold norms into edge weights
+        group_w = {nm: w * norm_in[nm][:, 0][edge_dst] for nm, w in group_w.items()}
+
+    h = x
+    for layer in params["layers"]:
+        acc = h @ layer["w_self"] + layer["b"]
+        for nm in IN_GROUPS:
+            if in_agg_mm is not None:
+                acc = acc + in_agg_mm(h, group_w[nm], layer[nm])
+            else:
+                acc = acc + (in_agg(h, group_w[nm]) * norm_in[nm]) @ layer[nm]
+        for nm in OUT_GROUPS:
+            acc = acc + (out_agg(h, out_w[nm]) * norm_out[nm]) @ layer[nm]
+        h = jax.nn.relu(acc)
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(params, batch):
+    logits = forward(
+        params,
+        batch["x"],
+        batch["edge_src"],
+        batch["edge_dst"],
+        batch.get("edge_inv"),
+        batch.get("edge_slot"),
+        num_nodes=batch["x"].shape[0],
+    )
+    logp = jax.nn.log_softmax(logits)
+    ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=1)[:, 0]
+    mask = batch.get("mask")
+    if mask is not None:
+        return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return -ll.mean()
+
+
+@partial(jax.jit, static_argnames=("optimizer",))
+def train_step(params, state, batch, optimizer: opt.AdamW):
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    updates, state = optimizer.update(grads, state, params)
+    params = opt.apply_updates(params, updates)
+    return params, state, loss
+
+
+def make_batch(design, features: np.ndarray, labels: np.ndarray) -> dict:
+    g = design.to_edge_graph() if hasattr(design, "to_edge_graph") else design
+    batch = {
+        "x": jnp.asarray(features),
+        "edge_src": jnp.asarray(g.edge_src),
+        "edge_dst": jnp.asarray(g.edge_dst),
+        "labels": jnp.asarray(labels.astype(np.int32)),
+    }
+    if g.edge_inv is not None:
+        batch["edge_inv"] = jnp.asarray(g.edge_inv)
+    if g.edge_slot is not None:
+        batch["edge_slot"] = jnp.asarray(g.edge_slot)
+    return batch
+
+
+def train(
+    params,
+    batch: dict,
+    *,
+    epochs: int = 200,
+    lr: float = 5e-3,
+    log_every: int = 0,
+) -> tuple[dict, list]:
+    optimizer = opt.AdamW(lr=lr, weight_decay=1e-4)
+    state = optimizer.init(params)
+    history = []
+    for e in range(epochs):
+        params, state, loss = train_step(params, state, batch, optimizer)
+        if log_every and (e % log_every == 0 or e == epochs - 1):
+            history.append((e, float(loss)))
+    return params, history
+
+
+@partial(jax.jit, static_argnames=("num_nodes", "agg"))
+def _predict(params, x, edge_src, edge_dst, edge_inv, edge_slot, num_nodes, agg):
+    return jnp.argmax(
+        forward(
+            params, x, edge_src, edge_dst, edge_inv, edge_slot,
+            num_nodes=num_nodes, agg=agg,
+        ),
+        axis=-1,
+    )
+
+
+def _make_agg(g, backend: str):
+    """Build the kernel-backend aggregation pair for a graph (None = ref)."""
+    if backend in (None, "ref"):
+        return None
+    from repro.kernels import ops
+
+    return ops.make_agg_pair(g.edge_src, g.edge_dst, g.num_nodes, backend)
+
+
+def predict(params, design, features, backend: str = "ref") -> np.ndarray:
+    g = design.to_edge_graph() if hasattr(design, "to_edge_graph") else design
+    inv = None if g.edge_inv is None else jnp.asarray(g.edge_inv)
+    slot = None if g.edge_slot is None else jnp.asarray(g.edge_slot)
+    return np.asarray(
+        _predict(
+            params,
+            jnp.asarray(features),
+            jnp.asarray(g.edge_src),
+            jnp.asarray(g.edge_dst),
+            inv,
+            slot,
+            g.num_nodes,
+            _make_agg(g, backend),
+        )
+    )
+
+
+def predict_partitioned(
+    params,
+    subgraphs: list[Subgraph],
+    features: np.ndarray,
+    num_nodes: int,
+    backend: str = "ref",
+) -> np.ndarray:
+    """Per-partition inference; core-node predictions only (paper's flow).
+
+    Each subgraph is an independent device-sized problem — this is the
+    memory-bounding property that lets a 1024-bit multiplier run on one
+    accelerator.
+    """
+    out = np.zeros(num_nodes, dtype=np.int64)
+    for sg in subgraphs:
+        feats = jnp.asarray(features[sg.global_ids])
+        inv = None if sg.edge_inv is None else jnp.asarray(sg.edge_inv)
+        slot = None if sg.edge_slot is None else jnp.asarray(sg.edge_slot)
+        pred = _predict(
+            params,
+            feats,
+            jnp.asarray(sg.edge_src),
+            jnp.asarray(sg.edge_dst),
+            inv,
+            slot,
+            sg.num_nodes,
+            _make_agg(sg.to_edge_graph(), backend),
+        )
+        out[sg.global_ids[: sg.num_core]] = np.asarray(pred)[: sg.num_core]
+    return out
+
+
+def accuracy(pred: np.ndarray, labels: np.ndarray) -> float:
+    return float((pred == labels).mean())

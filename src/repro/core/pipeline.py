@@ -1,0 +1,160 @@
+"""End-to-end GROOT verification pipeline (paper Fig. 2 stages a-e).
+
+    netlist/AIG -> features -> [partition -> re-growth] -> GNN inference
+    -> XOR/MAJ classification -> algebraic verification
+
+Also provides the device-memory model used by the Fig. 8 / Table II
+benchmark: because this container is CPU-only, "GPU memory" is an
+*analytic but array-accurate* count of the device buffers each inference
+step allocates (features, activations for L layers, edge arrays, gathered
+edge streams, params).  Partitioned runs count the PEAK over partitions —
+exactly the quantity the paper's partitioning bounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import aig as A
+from repro.core import gnn
+from repro.core.features import groot_features
+from repro.core.graph import EdgeGraph, batch_graphs
+from repro.core.partition import PARTITIONERS
+from repro.core.regrowth import Subgraph, extract_partitions, boundary_edge_fraction
+from repro.core.verify import VerifyResult, verify
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    dataset: str = "csa"
+    bits: int = 32
+    batch: int = 1
+    num_partitions: int = 1
+    regrow: bool = True
+    partitioner: str = "multilevel"
+    gnn: gnn.GNNConfig = dataclasses.field(default_factory=gnn.GNNConfig)
+    aggregate: str = "ref"   # "ref" | "groot" (Pallas kernel) | "onehot"
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    accuracy: float
+    core_accuracy: float          # accuracy on S_p nodes (what the paper plots)
+    peak_memory_bytes: int
+    unpartitioned_memory_bytes: int
+    boundary_edge_frac: float
+    timings: dict
+    verdict: Optional[VerifyResult]
+    num_nodes: int
+    num_edges: int
+
+
+def memory_model_bytes(
+    num_nodes: int, num_edges: int, cfg: gnn.GNNConfig, include_params: bool = True
+) -> int:
+    """Device bytes for one inference over a (sub)graph.
+
+    features (N,Fin) fp32 + per-layer activations 2x(N,H) (double-buffered
+    current/next) + 2x aggregated (N,H) + edge index arrays 2x int32 x2
+    directions + gathered edge stream (E,H) fp32 (the gather->MXU stream of
+    the TPU formulation) + params.
+    """
+    f32 = 4
+    n, e = num_nodes, num_edges
+    bytes_ = n * cfg.in_features * f32
+    h = cfg.hidden
+    bytes_ += 2 * n * h * f32          # h, h_next
+    bytes_ += 2 * n * h * f32          # agg_in, agg_out
+    bytes_ += 2 * 2 * e * 4            # edge src/dst, both directions
+    bytes_ += e * h * f32              # gathered edge stream
+    if include_params:
+        p = cfg.in_features * h * 3 + (cfg.num_layers - 1) * 3 * h * h + h * cfg.num_classes
+        bytes_ += p * f32
+    return int(bytes_)
+
+
+def run_pipeline(
+    cfg: PipelineConfig, params, *, verify_result: bool = False
+) -> PipelineResult:
+    """Inference + verification with a trained model."""
+    t0 = time.perf_counter()
+    design = A.make_design(cfg.dataset, cfg.bits, seed=cfg.seed)
+    labels = design.label
+    feats = groot_features(design)
+    g1 = design.to_edge_graph()
+    if cfg.batch > 1:
+        g = batch_graphs([g1] * cfg.batch)
+        feats = np.tile(feats, (cfg.batch, 1))
+        labels = np.tile(labels, cfg.batch)
+    else:
+        g = g1
+    t_gen = time.perf_counter() - t0
+
+    mem_full = memory_model_bytes(g.num_nodes, g.num_edges, cfg.gnn)
+
+    t0 = time.perf_counter()
+    if cfg.num_partitions <= 1:
+        pred = gnn.predict(params, g, feats, backend=cfg.aggregate)
+        peak_mem = mem_full
+        bfrac = 0.0
+        t_part = 0.0
+        t_inf = time.perf_counter() - t0
+    else:
+        part = PARTITIONERS[cfg.partitioner](g, cfg.num_partitions, seed=cfg.seed)
+        bfrac = boundary_edge_fraction(g, part)
+        subs = extract_partitions(g, part, regrow=cfg.regrow)
+        t_part = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        pred = gnn.predict_partitioned(
+            params, subs, feats, g.num_nodes, backend=cfg.aggregate
+        )
+        t_inf = time.perf_counter() - t0
+        peak_mem = max(
+            memory_model_bytes(sg.num_nodes, sg.num_edges, cfg.gnn) for sg in subs
+        )
+
+    acc = gnn.accuracy(pred, labels)
+    verdict = None
+    if verify_result and cfg.batch == 1 and isinstance(design, A.AIG):
+        verdict = verify(
+            design,
+            pred[: design.num_nodes],
+            bits=cfg.bits,
+            signed=(cfg.dataset == "booth"),
+            simulate=cfg.bits <= 64,
+        )
+    return PipelineResult(
+        accuracy=acc,
+        core_accuracy=acc,
+        peak_memory_bytes=peak_mem,
+        unpartitioned_memory_bytes=mem_full,
+        boundary_edge_frac=bfrac,
+        timings={"gen": t_gen, "partition": t_part, "inference": t_inf},
+        verdict=verdict,
+        num_nodes=g.num_nodes,
+        num_edges=g.num_edges,
+    )
+
+
+def train_model(
+    dataset: str = "csa",
+    bits: int = 8,
+    *,
+    cfg: Optional[gnn.GNNConfig] = None,
+    epochs: int = 300,
+    seed: int = 0,
+):
+    """Train the GNN on a small design (the paper trains on 8-bit)."""
+    import jax
+
+    cfg = cfg or gnn.GNNConfig()
+    design = A.make_design(dataset, bits, seed=seed)
+    feats = groot_features(design)
+    batch = gnn.make_batch(design, feats, design.label.astype(np.int32))
+    params = gnn.init_params(cfg, jax.random.key(seed))
+    params, hist = gnn.train(params, batch, epochs=epochs, log_every=50)
+    return params, hist

@@ -1,0 +1,42 @@
+"""Elastic scaling: rebuild the mesh after topology changes.
+
+A pod loss (512 -> 256 chips) or expansion changes the device set; the
+parameters' logical axes are topology-independent, so re-deployment is:
+
+    new_mesh   = choose_mesh(len(healthy_devices))
+    shardings  = tree_shardings(spec_tree, new_mesh, make_rules(new_mesh))
+    state      = restore(like, ckpt_dir, shardings=shardings)
+
+``choose_mesh`` picks the largest (data x model) grid with the preferred
+TP width that fits the device count; global batch is re-split over the
+new data extent (batch scaling policy: keep global batch, grow per-device
+batch — the optimizer schedule is unchanged).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def choose_mesh(n_devices: int, *, prefer_model: int = 16):
+    """Largest (data, model) mesh over n_devices with TP <= prefer_model."""
+    model = min(prefer_model, n_devices)
+    while n_devices % model:
+        model //= 2
+    data = n_devices // model
+    devs = np.asarray(jax.devices()[:n_devices]).reshape(data, model)
+    from jax.sharding import Mesh
+
+    return Mesh(devs, ("data", "model"))
+
+
+def replan_batch(global_batch: int, old_data: int, new_data: int) -> dict:
+    """Keep the global batch constant across topology changes."""
+    assert global_batch % new_data == 0, (
+        f"global batch {global_batch} not divisible by data={new_data}"
+    )
+    return {
+        "global_batch": global_batch,
+        "per_device_batch_old": global_batch // old_data,
+        "per_device_batch_new": global_batch // new_data,
+    }

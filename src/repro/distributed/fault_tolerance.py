@@ -1,0 +1,125 @@
+"""Fault tolerance: heartbeat/straggler monitoring + restartable step loop.
+
+At thousand-node scale the expected time between node failures is shorter
+than a long training run, so the loop must (a) notice a dead/straggling
+worker quickly and (b) restart from the last checkpoint onto whatever
+topology is still healthy.
+
+``ResilientLoop`` wraps a step function with:
+  * per-step wall-time tracking -> an EWMA straggler detector
+    (step > ``straggler_factor`` x EWMA -> event recorded; on a real
+    cluster this triggers requeue-or-evict, here it is surfaced to the
+    caller/logs — the *policy* is pluggable);
+  * heartbeat files (host-level liveness the launcher can poll);
+  * periodic async checkpoints + automatic restore-on-construction, so a
+    relaunched job resumes at the last published step;
+  * bounded retry of transient step failures (checkpoint-restore-replay).
+
+The elastic-topology path (restore onto a smaller mesh) is exercised in
+tests/test_distributed.py via reshard-on-restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+from repro.checkpoint.manager import CheckpointManager, latest_step, restore
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    ewma: float
+
+
+class Heartbeat:
+    """Liveness file the launcher can poll (one per host)."""
+
+    def __init__(self, directory: str, host_id: int = 0):
+        self.path = Path(directory) / f"heartbeat_{host_id}.json"
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+
+    def beat(self, step: int):
+        self.path.write_text(json.dumps({"step": step, "t": time.time()}))
+
+    @staticmethod
+    def stale_hosts(directory: str, timeout_s: float) -> list:
+        now = time.time()
+        out = []
+        for p in Path(directory).glob("heartbeat_*.json"):
+            data = json.loads(p.read_text())
+            if now - data["t"] > timeout_s:
+                out.append(p.stem)
+        return out
+
+
+class ResilientLoop:
+    def __init__(
+        self,
+        step_fn: Callable,                   # (state, batch) -> (state, metrics)
+        init_state: Any,
+        *,
+        ckpt_dir: str,
+        ckpt_every: int = 50,
+        straggler_factor: float = 3.0,
+        max_retries: int = 2,
+        shardings: Any = None,
+        host_id: int = 0,
+    ):
+        self.step_fn = step_fn
+        self.ckpt = CheckpointManager(ckpt_dir)
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self.max_retries = max_retries
+        self.heartbeat = Heartbeat(ckpt_dir, host_id)
+        self.stragglers: list = []
+        self.ewma: Optional[float] = None
+        self.shardings = shardings
+
+        if latest_step(ckpt_dir) is not None:
+            self.state, self.step = restore(
+                init_state, ckpt_dir, shardings=shardings
+            )
+            self.step += 1
+            self.resumed = True
+        else:
+            self.state, self.step = init_state, 0
+            self.resumed = False
+
+    def run(self, batches, *, steps: Optional[int] = None):
+        """Iterate batches; yields (step, metrics)."""
+        for batch in batches:
+            if steps is not None and self.step >= steps:
+                break
+            metrics = self._one_step(batch)
+            yield self.step, metrics
+            self.step += 1
+        self.ckpt.save_async(self.state, self.step - 1)
+        self.ckpt.wait()
+
+    def _one_step(self, batch):
+        for attempt in range(self.max_retries + 1):
+            t0 = time.perf_counter()
+            try:
+                self.state, metrics = self.step_fn(self.state, batch)
+                break
+            except Exception:  # noqa: BLE001 transient failure -> replay
+                if attempt == self.max_retries:
+                    raise
+                if latest_step(self.ckpt.directory) is not None:
+                    self.state, _ = restore(
+                        self.state, self.ckpt.directory, shardings=self.shardings
+                    )
+        dt = time.perf_counter() - t0
+        ewma = dt if self.ewma is None else 0.9 * self.ewma + 0.1 * dt
+        if self.ewma is not None and dt > self.straggler_factor * self.ewma:
+            self.stragglers.append(StragglerEvent(self.step, dt, self.ewma))
+        self.ewma = ewma
+        self.heartbeat.beat(self.step)
+        if self.step % self.ckpt_every == 0 and self.step > 0:
+            self.ckpt.save_async(self.state, self.step)
+        return metrics

@@ -1,0 +1,69 @@
+"""Error-feedback int8 gradient compression for cross-pod data parallelism.
+
+At 1000+ nodes the pod-to-pod links (DCN class, ~an order of magnitude
+slower than ICI) carry only the DP gradient all-reduce.  Compressing that
+exchange 4x (f32 -> int8 + per-row scale) with error feedback (the
+quantisation residual is added back into the next step's gradient) is a
+standard trick that preserves convergence (1-bit Adam lineage).
+
+``compressed_psum(grads, axis, state)`` runs inside shard_map:
+
+    e      = grads + state.residual        (error feedback)
+    q, s   = quantize_int8(e)              (per trailing-row scale)
+    q_sum  = lax.psum(q.int32, axis)       (the wire transfer, 1/4 bytes)
+    out    = dequantize(q_sum) / n
+    state' = e - dequantize(q)             (local quantisation error)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def init_error_state(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(grads, axis: str, error_state):
+    """int8 error-feedback psum over ``axis``.  Returns (mean_grads, state').
+
+    Must be called inside shard_map with ``axis`` in scope.  All
+    participants quantise against a SHARED per-row scale (pmax over the
+    axis — one tiny extra collective), so the integer sum dequantises
+    exactly; the only residual is each participant's own rounding, which
+    error feedback re-injects next step.
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        local_max = jnp.max(jnp.abs(g32), axis=-1, keepdims=True)
+        scale = jax.lax.pmax(local_max, axis) / 127.0 + 1e-12  # shared
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        qs = jax.lax.psum(q.astype(jnp.int32), axis)           # the wire
+        out = qs.astype(jnp.float32) * scale / n
+        new_e = g32 - q.astype(jnp.float32) * scale            # local error
+        return out.astype(g.dtype), new_e
+
+    pairs = jax.tree.map(one, grads, error_state)
+    outs = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    errs = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return outs, errs
+
+
+def compression_ratio(grads) -> float:
+    """Wire bytes int8-path / f32-path (scale rows included)."""
+    num = den = 0
+    for g in jax.tree.leaves(grads):
+        rows = int(jnp.prod(jnp.asarray(g.shape[:-1]))) if g.ndim else 1
+        num += g.size * 1 + rows * 4
+        den += g.size * 4
+    return num / max(den, 1)

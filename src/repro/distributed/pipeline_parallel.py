@@ -1,0 +1,81 @@
+"""Microbatch pipeline parallelism over a mesh axis (GPipe schedule).
+
+For cross-pod deployments where the "pod" axis link is latency-bound,
+tensor-style collectives (all-reduce per layer) are a poor fit; a pipeline
+moves only the (B_mb, S, D) activation cut once per stage per microbatch.
+
+``pipeline_apply(fn_stage, params_stacked, x_mb, axis)`` runs inside
+shard_map with the stage dimension mapped to ``axis``:
+
+  * ``params_stacked``: leading dim = n_stages (sharded over ``axis``);
+  * ``x_mb``: (n_micro, B_mb, ...) microbatched inputs, everyone holds
+    them (stage 0 consumes, later stages ignore);
+  * the classic rotating-buffer schedule: n_micro + n_stages - 1 ticks,
+    each tick every stage applies its layer then ``ppermute``s its
+    activation to the next stage.
+
+Returns the final-stage outputs, (n_micro, B_mb, ...), valid on the last
+stage (and broadcast back so every stage returns the same value —
+convenient for loss computation under shard_map).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def pipeline_apply(
+    stage_fn: Callable,      # (stage_params, x) -> y  (one stage's compute)
+    stage_params,            # pytree, leaves (1, ...) — this stage's slice
+    x_mb: jax.Array,         # (n_micro, B_mb, ...) microbatched input
+    axis: str,
+):
+    n_stages = jax.lax.psum(1, axis)
+    stage = jax.lax.axis_index(axis)
+    n_micro = x_mb.shape[0]
+    ticks = n_micro + n_stages - 1
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    params = jax.tree.map(lambda p: p[0], stage_params)
+    buf = jnp.zeros_like(x_mb[0])                    # rotating activation
+    outs = jnp.zeros((n_micro,) + x_mb.shape[1:], x_mb.dtype)
+
+    def tick(carry, t):
+        buf, outs = carry
+        mb_in = t                                     # microbatch entering
+        # stage 0 ingests a fresh microbatch while t < n_micro
+        take = jnp.clip(mb_in, 0, n_micro - 1)
+        fresh = jax.lax.dynamic_index_in_dim(x_mb, take, 0, keepdims=False)
+        inp = jnp.where(stage == 0, fresh, buf)
+        # bubble guard: stage s works on microbatch (t - s)
+        my_mb = t - stage
+        active = (my_mb >= 0) & (my_mb < n_micro)
+        y = stage_fn(params, inp)
+        y = jnp.where(active, y, buf)
+        # last stage records its finished microbatch
+        done_idx = jnp.clip(my_mb, 0, n_micro - 1)
+        record = active & (stage == n_stages - 1)
+        outs = jax.lax.cond(
+            record,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, y, done_idx, 0
+            ),
+            lambda o: o,
+            outs,
+        )
+        # rotate activations to the next stage
+        buf = jax.lax.ppermute(y, axis, perm)
+        return (buf, outs), None
+
+    (buf, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(ticks))
+    # broadcast final outputs from the last stage to everyone
+    outs = jax.lax.ppermute(
+        outs, axis, [( (n_stages - 1 + i) % n_stages, i) for i in range(n_stages)]
+    ) if n_stages > 1 else outs
+    # after rotation by one, stage 0 holds last stage's outs; rebroadcast:
+    outs = jax.lax.psum(
+        jnp.where(stage == 0, outs, jnp.zeros_like(outs)), axis
+    )
+    return outs

@@ -1,0 +1,74 @@
+"""Fused LD-aggregate + weight-matmul Pallas kernel (beyond-paper opt).
+
+The GROOT paper stops at the SpMM; in GraphSAGE every aggregation is
+immediately followed by a dense ``(N, F) @ (F, H)`` matmul.  Fusing the two
+keeps the aggregated row block in VMEM and feeds it straight to the MXU —
+the aggregated ``(R_t, F)`` tile is never written to HBM.  This removes
+one full round-trip of the aggregate array per layer per group:
+
+    unfused:  write (N,F) agg + read (N,F) agg  = 2*N*F*4 bytes per group
+    fused:    0 bytes (lives in VMEM/VREG)
+
+For the GNN's memory-bound regime (arithmetic intensity of the SpMM is
+O(1) flops/byte) this is the dominant HBM-traffic term after the gather —
+see EXPERIMENTS.md §Perf (GROOT kernel iterations).
+
+Validated in interpret mode against ``ref.ell_block_reduce_ref @ W``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.groot_spmm import F_TILE
+
+
+def _fused_kernel(msgs_ref, w_ref, o_ref, *, rows: int, deg: int):
+    """(R_t*d, F) tile + (F, H_t) weights -> (R_t, H_t) = rowsum @ W."""
+    m = msgs_ref[...]
+    agg = m.reshape(rows, deg, m.shape[-1]).sum(axis=1)
+    o_ref[...] = jax.lax.dot(agg, w_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def fused_ld_matmul(
+    msgs: jax.Array,
+    w_mat: jax.Array,
+    deg: int,
+    rows_per_tile: int,
+    *,
+    interpret: bool = True,
+    h_tile: int = F_TILE,
+) -> jax.Array:
+    """msgs: (R_pad * deg, F_pad); w_mat: (F_pad, H_pad) -> (R_pad, H_pad).
+
+    Equivalent to ``ell_block_reduce(msgs) @ w_mat`` with the intermediate
+    kept in VMEM.  F is carried whole per tile (GNN hidden <= 256 floats =
+    1 KiB/row); H is tiled on the lane dim.
+    """
+    f_pad = msgs.shape[1]
+    h_pad = w_mat.shape[1]
+    r_pad = msgs.shape[0] // deg
+    r_t = rows_per_tile
+    h_t = min(h_tile, h_pad)
+    grid = (r_pad // r_t, h_pad // h_t)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, rows=r_t, deg=deg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r_t * deg, f_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((f_pad, h_t), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((r_t, h_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, h_pad), msgs.dtype),
+        interpret=interpret,
+    )(msgs, w_mat)
+
+
+def fused_ref(msgs: jax.Array, w_mat: jax.Array, deg: int) -> jax.Array:
+    """Oracle: reshape-sum then matmul."""
+    r = msgs.shape[0] // deg
+    agg = msgs.reshape(r, deg, msgs.shape[1]).sum(axis=1)
+    return agg @ w_mat

@@ -1,0 +1,341 @@
+"""GROOT degree-bucketed SpMM as Pallas TPU kernels (paper §IV, TPU-adapted).
+
+The paper's insight: EDA graph degree distributions are *polarized* — a few
+extreme high-degree (HD >= 512) rows (high-fanout nets) and millions of
+low-degree (LD <= 12) rows (AND gates: in-degree 2, fanout 2-4).  One
+schedule cannot serve both.  The CUDA design assigns 32 warps to one HD row
+and packs many LD rows per warp after a degree count-sort.
+
+TPU adaptation (see DESIGN.md §2): no warps — the unit of work is a VMEM
+tile feeding the VPU/MXU.
+
+  * **count-sort** (host, O(E)) buckets rows by next-pow2(degree); within a
+    bucket every row has the same padded degree ``d``, so the bucket is an
+    ELL slab: its gathered edge messages form a dense ``(R_b * d, F)``
+    array where each destination row owns ``d`` consecutive message rows —
+    the TPU equivalent of "rows with the same degree are assembled into the
+    same blocks" (paper Fig. 5).
+  * **LD kernel**: grid tile ``(R_t * d, F_t)`` -> output tile ``(R_t,
+    F_t)``; the segment reduction is a reshape-sum (VPU) or a one-hot
+    block-diagonal matmul (MXU) — contiguous loads, coalesced stores, no
+    atomics: the same "aggregate many whole small rows per work unit"
+    economics as packing ``6m/3m/2m`` rows per warp.
+  * **HD kernel**: a row's edge stream is split into fixed ``E_t``-edge
+    chunks; the grid walks chunks of the same row consecutively and
+    accumulates partial sums into the row's output block *in VMEM*
+    (initialised on the row's first chunk via scalar-prefetched metadata)
+    — the analogue of splitting one row across 32 warps, with the shuffle
+    reduction replaced by output-block revisiting.
+  * the neighbour gather itself (``x[src]``) is done by XLA outside the
+    kernel: TPUs have no efficient in-kernel random HBM gather, so the
+    TPU-native formulation is gather -> dense edge stream -> systolic
+    reduce (DESIGN.md §2, "hardware adaptation").
+
+Thresholds mirror the paper: ``E_T = 512`` — rows with degree > 512 take
+the HD path, everything else lands in an LD power-of-2 bucket (1..512).
+
+All kernels are validated in ``interpret=True`` mode against
+``kernels/ref.py`` (CPU container; TPU is the target).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Paper §IV thresholds: HD rows have degree >= 512; LD buckets are the
+# power-of-two degrees up to E_T.
+E_T = 512
+F_TILE = 128           # lane dimension tile (TPU lane width)
+LD_TILE_EDGES = 2048   # target edges per LD VMEM tile (R_t * d)
+SUBLANE = 8            # f32 sublane quantum
+
+
+# ---------------------------------------------------------------------------
+# Host-side plan (the count-sort / row-assembly of paper Fig. 5, step B)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LdBucket:
+    """All rows whose (padded) degree is ``deg``: an ELL slab."""
+
+    deg: int
+    rows: np.ndarray        # (R_pad,) int32 destination row ids (pad = -1)
+    cols: np.ndarray        # (R_pad * deg,) int64 source node ids (pad = N)
+    eids: np.ndarray        # (R_pad * deg,) int32 edge ids (pad = E)
+    rows_per_tile: int      # R_t
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.rows.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class HdPlan:
+    """Rows with degree > E_T, chunked into E_t-edge pieces."""
+
+    rows: np.ndarray        # (n_hd,) int32 destination row ids
+    cols: np.ndarray        # (n_chunks * E_t,) int64 source ids (pad = N)
+    eids: np.ndarray        # (n_chunks * E_t,) int32 edge ids (pad = E)
+    chunk_meta: np.ndarray  # (n_chunks, 2) int32: [output row slot, is_first]
+
+    @property
+    def num_chunks(self) -> int:
+        return int(self.chunk_meta.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmmPlan:
+    num_nodes: int
+    num_edges: int
+    buckets: tuple          # tuple[LdBucket, ...]
+    hd: Optional[HdPlan]
+    e_t: int = E_T
+
+    def padding_overhead(self) -> float:
+        """Padded-slot fraction — the cost of ELL bucketing (tests assert
+        the pow-2 bound: <= ~2x + tile-rounding)."""
+        slots = sum(b.eids.size for b in self.buckets)
+        slots += self.hd.eids.size if self.hd else 0
+        return slots / max(self.num_edges, 1)
+
+
+def build_plan(
+    edge_src: np.ndarray,
+    edge_dst: np.ndarray,
+    num_nodes: int,
+    *,
+    e_t: int = E_T,
+    ld_tile_edges: int = LD_TILE_EDGES,
+) -> SpmmPlan:
+    """Degree count-sort + row assembly (paper Fig. 5 step B, host, O(E)).
+
+    ``eids`` index the *edge array*, so one plan serves any (x, w) pair on
+    the same graph (all six slot/polarity groups of the GNN reuse it).
+    """
+    edge_src = np.asarray(edge_src, dtype=np.int64)
+    edge_dst = np.asarray(edge_dst, dtype=np.int64)
+    n, e = int(num_nodes), int(edge_dst.shape[0])
+    deg = np.bincount(edge_dst, minlength=n).astype(np.int64)
+
+    # CSR-style row starts after a stable count-sort of edges by dest row.
+    order = np.argsort(edge_dst, kind="stable").astype(np.int64)
+    starts = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(deg, out=starts[1:])
+
+    buckets: list[LdBucket] = []
+    d = 1
+    while d <= e_t:
+        lo = 1 if d == 1 else d // 2 + 1
+        rows = np.where((deg >= lo) & (deg <= d))[0]
+        if rows.size:
+            r_t = max(SUBLANE, (ld_tile_edges // d) // SUBLANE * SUBLANE)
+            r_pad = -rows.size % r_t
+            eids = np.full((rows.size + r_pad, d), e, dtype=np.int64)
+            for slot in range(d):  # d slots; loop count <= 512, host-only
+                take = deg[rows] > slot
+                eids[: rows.size][take, slot] = order[starts[rows[take]] + slot]
+            rows_p = np.concatenate(
+                [rows, np.full(r_pad, -1, dtype=np.int64)]
+            ).astype(np.int32)
+            flat = eids.reshape(-1)
+            cols = np.where(flat < e, edge_src[np.minimum(flat, e - 1)], n)
+            buckets.append(
+                LdBucket(
+                    deg=d,
+                    rows=rows_p,
+                    cols=cols,
+                    eids=flat.astype(np.int32),
+                    rows_per_tile=r_t,
+                )
+            )
+        d *= 2
+
+    hd_rows = np.where(deg > e_t)[0]
+    hd = None
+    if hd_rows.size:
+        n_chunks_per = -(-deg[hd_rows] // e_t)
+        total_chunks = int(n_chunks_per.sum())
+        eids = np.full((total_chunks, e_t), e, dtype=np.int64)
+        meta = np.zeros((total_chunks, 2), dtype=np.int32)
+        c = 0
+        for slot_i, r in enumerate(hd_rows):
+            row_edges = order[starts[r] : starts[r + 1]]
+            for k in range(int(n_chunks_per[slot_i])):
+                chunk = row_edges[k * e_t : (k + 1) * e_t]
+                eids[c, : chunk.size] = chunk
+                meta[c] = (slot_i, 1 if k == 0 else 0)
+                c += 1
+        flat = eids.reshape(-1)
+        cols = np.where(flat < e, edge_src[np.minimum(flat, e - 1)], n)
+        hd = HdPlan(
+            rows=hd_rows.astype(np.int32),
+            cols=cols,
+            eids=flat.astype(np.int32),
+            chunk_meta=meta,
+        )
+
+    return SpmmPlan(num_nodes=n, num_edges=e, buckets=tuple(buckets), hd=hd, e_t=e_t)
+
+
+# ---------------------------------------------------------------------------
+# LD kernel
+# ---------------------------------------------------------------------------
+
+def _ld_kernel(msgs_ref, o_ref, *, rows: int, deg: int):
+    """(R_t * d, F_t) edge-message tile -> (R_t, F_t) row sums (VPU path).
+
+    Accumulation is always f32 (bf16 inputs are widened in VREGs — free on
+    the VPU, and required for deep-degree numerical sanity)."""
+    m = msgs_ref[...].astype(jnp.float32)
+    o_ref[...] = m.reshape(rows, deg, m.shape[-1]).sum(axis=1)
+
+
+def _ld_kernel_mxu(red_ref, msgs_ref, o_ref):
+    """MXU path: one-hot block-diagonal reduction matrix @ message tile.
+
+    ``red`` is (R_t, R_t*d) with red[r, r*d:(r+1)*d] = 1 — the segment sum
+    becomes a systolic matmul (DESIGN.md §2, "one-hot MXU matmul").
+    """
+    o_ref[...] = jax.lax.dot(
+        red_ref[...], msgs_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def ld_bucket_apply(
+    msgs: jax.Array, deg: int, rows_per_tile: int, *, interpret: bool, mxu: bool
+) -> jax.Array:
+    """Run the LD kernel over one ELL slab.  msgs: (R_pad * deg, F_pad)."""
+    f_pad = msgs.shape[1]
+    r_pad = msgs.shape[0] // deg
+    r_t = rows_per_tile
+    grid = (r_pad // r_t, f_pad // F_TILE)
+    out_shape = jax.ShapeDtypeStruct((r_pad, f_pad), jnp.float32)
+    if mxu and deg > 1:
+        red = np.zeros((r_t, r_t * deg), dtype=np.float32)
+        for r in range(r_t):
+            red[r, r * deg : (r + 1) * deg] = 1.0
+        return pl.pallas_call(
+            _ld_kernel_mxu,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((r_t, r_t * deg), lambda i, j: (0, 0)),
+                pl.BlockSpec((r_t * deg, F_TILE), lambda i, j: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((r_t, F_TILE), lambda i, j: (i, j)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(jnp.asarray(red, msgs.dtype), msgs)
+    return pl.pallas_call(
+        functools.partial(_ld_kernel, rows=r_t, deg=deg),
+        grid=grid,
+        in_specs=[pl.BlockSpec((r_t * deg, F_TILE), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((r_t, F_TILE), lambda i, j: (i, j)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(msgs)
+
+
+# ---------------------------------------------------------------------------
+# HD kernel
+# ---------------------------------------------------------------------------
+
+def _hd_kernel(meta_ref, msgs_ref, o_ref):
+    """One E_t-edge chunk -> partial sum accumulated into the row's output.
+
+    Chunks of the same row are consecutive in the (inner) chunk grid dim,
+    so the output block stays resident in VMEM across the row's chunks —
+    the TPU version of the 32-warp row split + shuffle reduce.
+    """
+    c = pl.program_id(1)
+    part = msgs_ref[...].astype(jnp.float32).sum(axis=0, keepdims=True)
+
+    @pl.when(meta_ref[c, 1] == 1)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(meta_ref[c, 1] == 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def hd_apply(
+    msgs: jax.Array,
+    chunk_meta: np.ndarray,
+    n_hd_rows: int,
+    e_t: int,
+    *,
+    interpret: bool,
+) -> jax.Array:
+    """msgs: (n_chunks * e_t, F_pad) -> (n_hd_rows, F_pad).
+
+    Grid is (F-tiles, chunks): the chunk dim is innermost so same-row
+    chunks revisit the same output block back-to-back (required for the
+    VMEM accumulation pattern).
+    """
+    f_pad = msgs.shape[1]
+    n_chunks = msgs.shape[0] // e_t
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(f_pad // F_TILE, n_chunks),
+        in_specs=[pl.BlockSpec((e_t, F_TILE), lambda j, c, meta: (c, j))],
+        out_specs=pl.BlockSpec((1, F_TILE), lambda j, c, meta: (meta[c, 0], j)),
+    )
+    return pl.pallas_call(
+        _hd_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_hd_rows, f_pad), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(chunk_meta), msgs)
+
+
+# ---------------------------------------------------------------------------
+# Full SpMM: gather (XLA) -> per-bucket kernels -> scatter (XLA)
+# ---------------------------------------------------------------------------
+
+def apply_plan(
+    plan: SpmmPlan,
+    x: jax.Array,
+    w: Optional[jax.Array] = None,
+    *,
+    interpret: bool = True,
+    mxu: bool = False,
+) -> jax.Array:
+    """Compute ``out[r] = sum_{e: dst[e]=r} w[e] * x[src[e]]`` via the
+    degree-bucketed kernels.  ``plan`` is static (host numpy); ``x``/``w``
+    are traced.  Matches :func:`repro.kernels.ref.spmm_ref`.
+    """
+    n, f = x.shape
+    f_extra = -f % F_TILE
+    x_p = jnp.pad(x, ((0, 1), (0, f_extra)))  # +1 zero row = gather pad target
+    w_p = None if w is None else jnp.pad(w.astype(x.dtype), (0, 1))
+
+    def gather(cols: np.ndarray, eids: np.ndarray) -> jax.Array:
+        g = jnp.take(x_p, jnp.asarray(cols), axis=0)
+        if w_p is not None:
+            g = g * jnp.take(w_p, jnp.asarray(eids), axis=0)[:, None]
+        return g
+
+    out = jnp.zeros((n, f + f_extra), jnp.float32)
+    for b in plan.buckets:
+        msgs = gather(b.cols, b.eids)
+        red = ld_bucket_apply(
+            msgs, b.deg, b.rows_per_tile, interpret=interpret, mxu=mxu
+        )
+        rows = jnp.asarray(np.where(b.rows < 0, n, b.rows).astype(np.int32))
+        out = out.at[rows].add(red, mode="drop")
+
+    if plan.hd is not None:
+        msgs = gather(plan.hd.cols, plan.hd.eids)
+        red = hd_apply(
+            msgs, plan.hd.chunk_meta, len(plan.hd.rows), plan.e_t, interpret=interpret
+        )
+        out = out.at[jnp.asarray(plan.hd.rows)].add(red, mode="drop")
+
+    return out[:, :f].astype(x.dtype)

@@ -1,0 +1,179 @@
+"""Backend dispatch + jit wrappers for graph aggregation.
+
+An *aggregation pair* is ``(in_agg, out_agg)`` — two callables ``(x, w) ->
+(N, F)`` computing the weighted neighbour sums over fanin edges and fanout
+edges respectively.  ``repro.core.gnn.forward`` consumes such pairs; this
+module builds them for each backend:
+
+  ``ref``         gather + segment_sum (row-parallel SpMM; the
+                  GNNAdvisor-style baseline)
+  ``onehot``      dense one-hot matmul formulation (cuSPARSE-dense
+                  analogue; O(N*E) — small graphs/benchmarks only)
+  ``groot``       the Pallas degree-bucketed HD/LD kernels (VPU reduce),
+                  interpret=True on CPU
+  ``groot_mxu``   same, LD reduction as one-hot block-diag MXU matmul
+  ``groot_fused`` ``groot`` aggregation whose LD slabs can additionally be
+                  fused with the following weight matmul
+                  (``agg_mm`` method; beyond-paper optimization)
+
+Plans are built once per graph on host (numpy) and embedded as constants
+in the jitted computation — exactly how a static EDA graph is deployed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+from repro.kernels.groot_spmm import SpmmPlan, apply_plan, build_plan
+from repro.kernels.fused_sage import fused_ld_matmul
+
+BACKENDS = ("ref", "onehot", "groot", "groot_mxu", "groot_fused")
+
+
+def onehot_spmm(x, edge_src, edge_dst, num_nodes: int, w=None):
+    """Dense formulation: ``onehot(dst)^T @ (x[src] * w)``.
+
+    This is what a "just use dense matmul" port of SpMM to the MXU looks
+    like *without* the GROOT insight — the baseline the degree-bucketed
+    kernels beat on memory (it materialises an (E, N) one-hot).
+    """
+    msgs = jnp.take(x, edge_src, axis=0)
+    if w is not None:
+        msgs = msgs * w[:, None].astype(msgs.dtype)
+    oh = jax.nn.one_hot(edge_dst, num_nodes, dtype=x.dtype)  # (E, N)
+    return oh.T @ msgs
+
+
+@dataclasses.dataclass
+class AggPair:
+    """Aggregation callables for one graph (+ optional fused path)."""
+
+    in_agg: Callable      # (x, w) -> (N, F) over fanin edges
+    out_agg: Callable     # (x, w) -> (N, F) over fanout edges
+    backend: str
+    # fused aggregate+matmul over fanin LD slabs; None when unsupported
+    in_agg_mm: Optional[Callable] = None
+    in_plan: Optional[SpmmPlan] = None
+    out_plan: Optional[SpmmPlan] = None
+
+    def __hash__(self):  # jit static-arg friendliness
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other
+
+
+def _segment_pair(edge_src, edge_dst, num_nodes) -> AggPair:
+    s = jnp.asarray(edge_src)
+    d = jnp.asarray(edge_dst)
+    return AggPair(
+        in_agg=lambda x, w=None: kref.spmm_ref(x, s, d, num_nodes, w),
+        out_agg=lambda x, w=None: kref.spmm_ref(x, d, s, num_nodes, w),
+        backend="ref",
+    )
+
+
+def _onehot_pair(edge_src, edge_dst, num_nodes) -> AggPair:
+    s = jnp.asarray(edge_src)
+    d = jnp.asarray(edge_dst)
+    return AggPair(
+        in_agg=lambda x, w=None: onehot_spmm(x, s, d, num_nodes, w),
+        out_agg=lambda x, w=None: onehot_spmm(x, d, s, num_nodes, w),
+        backend="onehot",
+    )
+
+
+def _groot_pair(
+    edge_src, edge_dst, num_nodes, *, mxu: bool, fused: bool, interpret: bool = True
+) -> AggPair:
+    src = np.asarray(edge_src)
+    dst = np.asarray(edge_dst)
+    in_plan = build_plan(src, dst, num_nodes)
+    out_plan = build_plan(dst, src, num_nodes)
+
+    def in_agg(x, w=None):
+        return apply_plan(in_plan, x, w, interpret=interpret, mxu=mxu)
+
+    def out_agg(x, w=None):
+        return apply_plan(out_plan, x, w, interpret=interpret, mxu=mxu)
+
+    in_agg_mm = None
+    if fused:
+
+        def in_agg_mm(x, w, w_mat):
+            return _apply_plan_fused(in_plan, x, w, w_mat, interpret=interpret)
+
+    return AggPair(
+        in_agg=in_agg,
+        out_agg=out_agg,
+        backend="groot_fused" if fused else ("groot_mxu" if mxu else "groot"),
+        in_agg_mm=in_agg_mm,
+        in_plan=in_plan,
+        out_plan=out_plan,
+    )
+
+
+def _apply_plan_fused(plan: SpmmPlan, x, w, w_mat, *, interpret: bool):
+    """apply_plan with the LD reductions fused with ``@ w_mat``.
+
+    Output is (N, H) = (sum_e w_e x[src_e] into rows) @ w_mat, with the
+    aggregated (N, F) intermediate never materialised for LD rows.
+    """
+    from repro.kernels.groot_spmm import F_TILE, hd_apply
+
+    n, f = x.shape
+    h = w_mat.shape[1]
+    f_extra = -f % F_TILE
+    h_extra = -h % F_TILE
+    x_p = jnp.pad(x, ((0, 1), (0, f_extra)))
+    w_p = None if w is None else jnp.pad(w.astype(x.dtype), (0, 1))
+    wm_p = jnp.pad(w_mat.astype(x.dtype), ((0, f_extra), (0, h_extra)))
+
+    def gather(cols, eids):
+        g = jnp.take(x_p, jnp.asarray(cols), axis=0)
+        if w_p is not None:
+            g = g * jnp.take(w_p, jnp.asarray(eids), axis=0)[:, None]
+        return g
+
+    out = jnp.zeros((n, h + h_extra), x.dtype)
+    for b in plan.buckets:
+        msgs = gather(b.cols, b.eids)
+        red = fused_ld_matmul(msgs, wm_p, b.deg, b.rows_per_tile, interpret=interpret)
+        rows = jnp.asarray(np.where(b.rows < 0, n, b.rows).astype(np.int32))
+        out = out.at[rows].add(red, mode="drop")
+    if plan.hd is not None:
+        msgs = gather(plan.hd.cols, plan.hd.eids)
+        red = hd_apply(
+            msgs, plan.hd.chunk_meta, len(plan.hd.rows), plan.e_t, interpret=interpret
+        )
+        out = out.at[jnp.asarray(plan.hd.rows)].add(
+            red[:, :f] @ wm_p[:f, :], mode="drop"
+        )
+    return out[:, :h]
+
+
+def make_agg_pair(edge_src, edge_dst, num_nodes: int, backend: str = "ref") -> AggPair:
+    """Build the aggregation pair for a graph under the given backend."""
+    if backend == "ref":
+        return _segment_pair(edge_src, edge_dst, num_nodes)
+    if backend == "onehot":
+        return _onehot_pair(edge_src, edge_dst, num_nodes)
+    if backend == "groot":
+        return _groot_pair(edge_src, edge_dst, num_nodes, mxu=False, fused=False)
+    if backend == "groot_mxu":
+        return _groot_pair(edge_src, edge_dst, num_nodes, mxu=True, fused=False)
+    if backend == "groot_fused":
+        return _groot_pair(edge_src, edge_dst, num_nodes, mxu=False, fused=True)
+    raise ValueError(f"unknown backend {backend!r} (want one of {BACKENDS})")
+
+
+def groot_spmm(x, edge_src, edge_dst, num_nodes: int, w=None, *, backend="groot"):
+    """One-shot SpMM through the GROOT kernels (plan built per call — for
+    tests/benches; persistent users should hold an :class:`AggPair`)."""
+    pair = make_agg_pair(np.asarray(edge_src), np.asarray(edge_dst), num_nodes, backend)
+    return pair.in_agg(jnp.asarray(x), None if w is None else jnp.asarray(w))

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# init, and the production meshes below need 512 placeholder host devices.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, LM_ARCHS, get_config          # noqa: E402
+from repro.configs.shapes import SHAPES, supported_shapes       # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch.steps import GROOT_SHAPES, build_cell, build_groot_cell  # noqa: E402
+from repro.roofline import hlo as hlo_mod                       # noqa: E402
+from repro.sharding.rules import use_sharding                   # noqa: E402
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) and both production meshes this
+lowers + compiles the appropriate step with full sharding assignments and
+records memory_analysis / cost_analysis / loop-corrected HLO stats as JSON
+artifacts under experiments/dryrun/<mesh>/<arch>__<shape>.json.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k --mesh both
+"""
+
+ART_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _mem_fields(compiled):
+    ma = compiled.memory_analysis()
+    fields = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    out = {}
+    for f in fields:
+        try:
+            out[f] = int(getattr(ma, f))
+        except Exception:
+            pass
+    return out
+
+
+def run_cell(cell, mesh, mesh_name: str, save: bool = True) -> dict:
+    t0 = time.perf_counter()
+    jitted = jax.jit(
+        cell.step_fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    with use_sharding(mesh, fsdp=cell.static_meta.get("fsdp", False),
+                      sp=cell.static_meta.get("sp", False)):
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    cost = dict(compiled.cost_analysis() or {})
+    mem = _mem_fields(compiled)
+    stats = hlo_mod.analyze(compiled.as_text())
+    n_dev = mesh.devices.size
+    record = {
+        "arch": cell.arch,
+        "shape": cell.shape,
+        "mesh": mesh_name,
+        "devices": int(n_dev),
+        "meta": cell.static_meta,
+        "timing": {"lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2)},
+        "memory_analysis": mem,
+        "cost_analysis": {
+            k: float(v)
+            for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")
+        },
+        "hlo": {
+            "dot_flops_per_device": stats.dot_flops,
+            "collective_bytes_per_device": stats.collective_bytes,
+            "collective_by_kind": stats.collective_by_kind,
+            "traffic_bytes_per_device": stats.traffic_bytes,
+            "entry_param_bytes_per_device": stats.entry_param_bytes,
+            "while_trips": stats.while_trips,
+        },
+    }
+    if save:
+        out = ART_DIR / mesh_name
+        out.mkdir(parents=True, exist_ok=True)
+        path = out / f"{cell.arch}__{cell.shape}.json"
+        path.write_text(json.dumps(record, indent=1))
+        record["artifact"] = str(path)
+    return record
+
+
+def iter_cells(arch_filter=None, shape_filter=None):
+    for arch in ARCHS:
+        if arch_filter and arch != arch_filter:
+            continue
+        cfg = get_config(arch)
+        if arch == "groot-gnn":
+            shapes = list(GROOT_SHAPES)
+        else:
+            shapes = supported_shapes(cfg)
+        for shape in shapes:
+            if shape_filter and shape != shape_filter:
+                continue
+            yield arch, cfg, shape
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="architecture id")
+    ap.add_argument("--shape", default=None, help="input-shape name")
+    ap.add_argument("--mesh", default="both", choices=("pod", "multipod", "both"))
+    ap.add_argument("--all", action="store_true", help="every cell")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, _, shape in iter_cells():
+            print(f"{arch:28s} {shape}")
+        return
+
+    meshes = []
+    if args.mesh in ("pod", "both"):
+        meshes.append(("pod", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multipod", "both"):
+        meshes.append(("multipod", make_production_mesh(multi_pod=True)))
+
+    failures = []
+    for arch, cfg, shape in iter_cells(args.arch, args.shape):
+        for mesh_name, mesh in meshes:
+            tag = f"{arch} x {shape} x {mesh_name}"
+            try:
+                if arch == "groot-gnn":
+                    cell = build_groot_cell(cfg, shape, mesh)
+                else:
+                    cell = build_cell(cfg, shape, mesh)
+                rec = run_cell(cell, mesh, mesh_name)
+                m = rec["memory_analysis"]
+                per_dev = (
+                    m.get("argument_size_in_bytes", 0)
+                    + m.get("temp_size_in_bytes", 0)
+                ) / 1e9
+                print(
+                    f"[ok] {tag:64s} compile={rec['timing']['compile_s']:7.1f}s "
+                    f"args+temp/dev={per_dev:7.2f} GB "
+                    f"dotTF/dev={rec['hlo']['dot_flops_per_device']/1e12:9.3f} "
+                    f"collGB/dev={rec['hlo']['collective_bytes_per_device']/1e9:8.3f}",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e}", flush=True)
+                traceback.print_exc()
+
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,336 @@
+"""Step builders + sharding assignments for the launcher and dry-run.
+
+For every (arch, shape) cell this module produces:
+  * the step function (train_step / prefill_step / serve_step),
+  * abstract input trees (ShapeDtypeStruct — no allocation),
+  * in/out shardings (NamedSharding trees from the logical rules).
+
+Memory plans (DESIGN.md §6):
+  * params are stored f32 (the fp32 master) and cast to bf16 at use;
+  * train cells shard params/grads/opt-state over BOTH mesh axes
+    (TP over "model" + FSDP over "data") — v5e 16 GB/chip demands it for
+    the 67B/235B/400B archs and it is strictly better for the small ones;
+  * the 235B/400B archs use int8 blockwise Adam moments (AdamW8bit);
+  * serve cells hold bf16 weights; TP-only for <=11B dense archs,
+    TP+FSDP for the giants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, abstract, model_spec_tree
+from repro.configs.shapes import SHAPES, input_specs
+from repro.models.transformer import init_cache_tree
+from repro.serving.decode import make_prefill_step, make_serve_step
+from repro.sharding.rules import make_rules, partition_spec, tree_shardings
+from repro.training import optimizer as opt_mod
+from repro.training.train_step import make_train_step
+
+INT8_OPT_ARCHS = {"llama4-maverick-400b-a17b", "qwen3-moe-235b-a22b"}
+# sequence-parallel residuals: only where saved-activation memory demands
+# it (see sharding.rules.make_rules docstring + EXPERIMENTS.md §Perf)
+SP_TRAIN_ARCHS = set()  # measured: SP regressed collectives on every arch (see §Perf)
+FSDP_SERVE_ARCHS = {
+    "deepseek-67b", "llama4-maverick-400b-a17b", "qwen3-moe-235b-a22b",
+}
+# train_4k grad-accumulation per arch.  Each microbatch re-gathers the
+# FSDP weight shards (all-gather per layer), so fewer microbatches directly
+# divides the collective term; SP-sharded residuals keep activations small
+# enough to afford it.
+MICROBATCHES = {
+    "default": 8,
+    "deepseek-67b": 8,
+    "llama4-maverick-400b-a17b": 4,
+    "qwen3-moe-235b-a22b": 4,
+}
+# grouped remat (scan-over-scan checkpointing): residual saved once per G
+# super-blocks -> sqrt(L)-ish saved-activation memory at unchanged
+# recompute; replaces SP residual sharding (11-24x collective regression).
+REMAT_GROUP = {
+    "default": 1,
+    "deepseek-67b": 10,          # n_super=95 -> 9 groups + tail 5
+    "llama4-maverick-400b-a17b": 6,   # n_super=24
+    "qwen3-moe-235b-a22b": 10,   # n_super=94 -> 9 groups + tail 4
+}
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _batch_sharding(mesh: Mesh, shape):
+    """Shard dim 0 over the batch mesh axes when divisible."""
+    axes = batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    spec = [None] * len(shape)
+    if shape[0] % size == 0:
+        spec[0] = axes if len(axes) > 1 else axes[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings (path-keyed logical axes)
+# ---------------------------------------------------------------------------
+
+_CACHE_AXES = {
+    "k": ("batch", "kv_seq", None, None),
+    "v": ("batch", "kv_seq", None, None),
+    "pos": (),
+    "ck": ("batch", None, None, None),
+    "cv": ("batch", None, None, None),
+    "s": ("batch", None, None, None),       # rwkv state
+    "x_prev": ("batch", None),
+    "ffn_prev": ("batch", None),
+    "h": ("batch", None),                   # rglru state
+    "conv": ("batch", None, None),
+}
+
+
+def cache_shardings(cache_avals, mesh: Mesh, rules: dict):
+    def leaf_sharding(path, leaf):
+        key = None
+        for entry in reversed(path):
+            name = getattr(entry, "name", None) or getattr(entry, "key", None)
+            if isinstance(name, str) and name in _CACHE_AXES:
+                key = name
+                break
+        axes = _CACHE_AXES.get(key, ())
+        axes = tuple(axes)
+        if len(axes) == leaf.ndim - 1:
+            axes = (None,) + axes  # stacked super-block leading dim
+        elif len(axes) != leaf.ndim:
+            axes = (None,) * leaf.ndim
+        return NamedSharding(mesh, partition_spec(leaf.shape, axes, mesh, rules))
+
+    return jax.tree_util.tree_map_with_path(leaf_sharding, cache_avals)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state shardings
+# ---------------------------------------------------------------------------
+
+def opt_state_shardings(opt_state_avals, param_shardings, mesh: Mesh):
+    """m/v like the params (Q8 moments are parameter-shaped, so the q
+    tensor takes the param sharding verbatim and the (...,1) scale takes
+    it minus the last dim); step scalar replicated."""
+    rep = NamedSharding(mesh, P())
+
+    def per_leaf(aval, psh):
+        if isinstance(aval, opt_mod.Q8):
+            spec = list(psh.spec) + [None] * (aval.q.ndim - len(psh.spec))
+            scale_spec = spec[:-1] + [None]
+            return opt_mod.Q8(
+                q=NamedSharding(mesh, P(*spec)),
+                scale=NamedSharding(mesh, P(*scale_spec)),
+            )
+        return psh
+
+    def map_moment(avals):
+        return jax.tree.map(
+            per_leaf, avals, param_shardings,
+            is_leaf=lambda x: isinstance(x, opt_mod.Q8),
+        )
+
+    return opt_mod.AdamWState(
+        step=rep,
+        m=map_moment(opt_state_avals.m),
+        v=map_moment(opt_state_avals.v),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    step_fn: Any
+    args: tuple            # abstract inputs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    static_meta: dict = dataclasses.field(default_factory=dict)
+
+
+def make_optimizer(arch: str):
+    if arch in INT8_OPT_ARCHS:
+        return opt_mod.AdamW8bit(lr=3e-4, weight_decay=0.1)
+    return opt_mod.AdamW(lr=3e-4, weight_decay=0.1)
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh) -> Cell:
+    sh = SHAPES[shape_name]
+    spec_tree = model_spec_tree(cfg)
+    rules_fsdp = make_rules(mesh, fsdp=True)
+    rules_tp = make_rules(mesh, fsdp=False)
+    specs = input_specs(cfg, shape_name)
+
+    if sh.kind == "train":
+        params_avals = abstract(spec_tree, jnp.float32)
+        p_shard = tree_shardings(spec_tree, mesh, rules_fsdp)
+        optimizer = make_optimizer(cfg.name)
+        opt_avals = jax.eval_shape(optimizer.init, params_avals)
+        o_shard = opt_state_shardings(opt_avals, p_shard, mesh)
+        mb = MICROBATCHES.get(cfg.name, MICROBATCHES["default"])
+        rg = REMAT_GROUP.get(cfg.name, REMAT_GROUP["default"])
+        step = make_train_step(
+            cfg, optimizer, microbatches=mb, remat=True, remat_group=rg
+        )
+        batch = {"tokens": specs["tokens"]}
+        b_shard = {"tokens": _batch_sharding(mesh, specs["tokens"].shape)}
+        if "enc_input" in specs:
+            batch["enc_input"] = specs["enc_input"]
+            b_shard["enc_input"] = _batch_sharding(mesh, specs["enc_input"].shape)
+
+        def fn(params, opt_state, batch):
+            return step(params, opt_state, batch)
+
+        rep = NamedSharding(mesh, P())
+        out_sh = (
+            p_shard,
+            o_shard,
+            {"loss": rep, "grad_norm": rep},
+        )
+        return Cell(
+            arch=cfg.name, shape=shape_name, step_fn=fn,
+            args=(params_avals, opt_avals, batch),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=out_sh,
+            donate_argnums=(0, 1),
+            static_meta={"microbatches": mb, "optimizer": type(optimizer).__name__,
+                         "fsdp": True, "sp": cfg.name in SP_TRAIN_ARCHS,
+                         "remat_group": rg},
+        )
+
+    # serving cells: bf16 weights
+    params_avals = abstract(spec_tree, jnp.bfloat16)
+    fsdp = cfg.name in FSDP_SERVE_ARCHS
+    p_shard = tree_shardings(spec_tree, mesh, rules_fsdp if fsdp else rules_tp)
+    rules = rules_fsdp if fsdp else rules_tp
+
+    if sh.kind == "prefill":
+        step = make_prefill_step(cfg, sh.seq_len)
+        args = [params_avals, specs["tokens"]]
+        in_sh = [p_shard, _batch_sharding(mesh, specs["tokens"].shape)]
+        if "enc_input" in specs:
+            args.append(specs["enc_input"])
+            in_sh.append(_batch_sharding(mesh, specs["enc_input"].shape))
+        cache_avals = jax.eval_shape(
+            lambda: init_cache_tree(cfg, sh.global_batch, sh.seq_len)
+        )
+        out_sh = (
+            _batch_sharding(mesh, (sh.global_batch, cfg.vocab_size)),
+            cache_shardings(cache_avals, mesh, rules),
+        )
+        return Cell(
+            arch=cfg.name, shape=shape_name, step_fn=step,
+            args=tuple(args), in_shardings=tuple(in_sh), out_shardings=out_sh,
+            static_meta={"fsdp": fsdp},
+        )
+
+    # decode
+    step = make_serve_step(cfg)
+    cache_avals = specs["cache"]
+    c_shard = cache_shardings(cache_avals, mesh, rules)
+    tok_sh = _batch_sharding(mesh, specs["token"].shape)
+    out_sh = (
+        tok_sh,
+        _batch_sharding(mesh, (sh.global_batch, cfg.vocab_size)),
+        c_shard,
+    )
+    return Cell(
+        arch=cfg.name, shape=shape_name, step_fn=step,
+        args=(params_avals, cache_avals, specs["token"]),
+        in_shardings=(p_shard, c_shard, tok_sh),
+        out_shardings=out_sh,
+        donate_argnums=(1,),
+        static_meta={"fsdp": fsdp},
+    )
+
+
+# ---------------------------------------------------------------------------
+# GROOT GNN cell (the paper's own architecture, 11th arch)
+# ---------------------------------------------------------------------------
+
+GROOT_SHAPES = {
+    # name: (bits, batch) — node/edge counts follow the paper's table
+    # (1024-bit CSA x batch 16 = 134,103,040 nodes / 268,140,544 edges).
+    "verify_256b_bs16": (256, 16),
+    "verify_1024b_bs16": (1024, 16),
+}
+
+
+def groot_graph_dims(bits: int, batch: int, num_partitions: int):
+    """Padded per-partition sizes.  CSA node/edge counts scale ~ 6*bits^2
+    (paper: 1024b x16 -> 134.1M nodes, 268.1M edges => 8.186M/16.37M per
+    design).  Halo re-growth adds ~10% (paper §III-C) + padding slack."""
+    nodes = int(8.0 * bits * bits * batch)
+    edges = 2 * nodes
+    n_per = nodes // num_partitions
+    e_per = edges // num_partitions
+    pad = lambda x: int(np.ceil(x * 1.3 / 1024.0)) * 1024  # halo + slack
+    return pad(n_per), pad(e_per)
+
+
+def build_groot_cell(gcfg, shape_name: str, mesh: Mesh) -> Cell:
+    from repro.core import gnn
+
+    bits, batch = GROOT_SHAPES[shape_name]
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    parts = n_dev  # one re-grown partition per device
+    n_sub, e_sub = groot_graph_dims(bits, batch, parts)
+    cfg = gcfg.gnn
+
+    params_avals = jax.eval_shape(
+        lambda: gnn.init_params(cfg, jax.random.key(0))
+    )
+    f32, i32 = jnp.float32, jnp.int32
+    bf16 = jnp.bfloat16  # inference dtype: halves the HBM traffic of the
+    # memory-bound SpMM (beyond-paper opt; §Perf groot iteration)
+    batch_avals = {
+        "x": jax.ShapeDtypeStruct((parts, n_sub, cfg.in_features), bf16),
+        "edge_src": jax.ShapeDtypeStruct((parts, e_sub), i32),
+        "edge_dst": jax.ShapeDtypeStruct((parts, e_sub), i32),
+        "edge_inv": jax.ShapeDtypeStruct((parts, e_sub), jnp.bool_),
+        "edge_slot": jax.ShapeDtypeStruct((parts, e_sub), jnp.uint8),
+        "core_mask": jax.ShapeDtypeStruct((parts, n_sub), jnp.bool_),
+    }
+    all_axes = tuple(mesh.axis_names)
+    part_spec = lambda nd: NamedSharding(mesh, P(all_axes, *([None] * (nd - 1))))
+    b_shard = {k: part_spec(v.ndim) for k, v in batch_avals.items()}
+    rep = NamedSharding(mesh, P())
+
+    def infer_step(params, batch):
+        params16 = jax.tree.map(lambda a: a.astype(bf16), params)
+
+        def one(x, es, ed, ei, sl, mask):
+            logits = gnn.forward(
+                params16, x, es, ed, ei.astype(bf16) > 0.5, sl.astype(bf16),
+                num_nodes=n_sub,
+            )
+            pred = jnp.argmax(logits, axis=-1).astype(i32)
+            return jnp.where(mask, pred, -1)
+
+        return jax.vmap(one)(
+            batch["x"], batch["edge_src"], batch["edge_dst"],
+            batch["edge_inv"], batch["edge_slot"], batch["core_mask"],
+        )
+
+    return Cell(
+        arch="groot-gnn", shape=shape_name, step_fn=infer_step,
+        args=({k: v for k, v in jax.tree.map(lambda x: x, params_avals).items()}
+              if isinstance(params_avals, dict) else params_avals,
+              batch_avals),
+        in_shardings=(jax.tree.map(lambda _: rep, params_avals), b_shard),
+        out_shardings=part_spec(2),
+        static_meta={"bits": bits, "batch": batch, "partitions": parts,
+                     "nodes_per_part": n_sub, "edges_per_part": e_sub},
+    )

@@ -1,0 +1,297 @@
+"""Attention: GQA + RoPE + qk-norm + QKV-bias + sliding window + softcap +
+cross-attention, with an in-graph KV cache for decode.
+
+One function serves training (full causal), prefill (causal + cache
+write-out), decode (single query against the cache), encoder
+(bidirectional) and cross-attention.  All masks are position-based
+(iota compares on global positions), so ring-buffer caches and padded key
+blocks fall out of the same code path.
+
+Memory: whenever S*T score elements exceed ``FLASH_THRESHOLD`` the
+computation switches to a flash-attention schedule in pure ``lax`` —
+``lax.map`` over query blocks, ``lax.scan`` over key blocks with an online
+softmax (running max + denominator).  Peak live score memory is
+O(q_chunk * kv_chunk) per head instead of O(S*T): the 32k and 500k shapes
+are impossible without this.  (On real TPU hardware the Pallas kernel in
+``repro.kernels.flash_attention`` replaces this schedule — same blocking,
+scores resident in VMEM; the lax form is what the CPU dry-run compiles.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm, rope, softcap
+from repro.sharding import current_ctx, shard
+
+
+# TP-incompatible head counts are handled by ZERO-PADDING the head axis to
+# the TP multiple (cfg.head_pad_to, Megatron-style): exact math — padded
+# wo rows are zero so pad heads contribute nothing and receive no
+# gradient.  (A batch-reshard alternative was measured and refuted: the
+# per-microbatch batch (32) does not divide data*model=256, so the
+# constraint silently dropped — EXPERIMENTS.md §Perf.)
+
+FLASH_THRESHOLD = 4 * 1024 * 1024  # S*T elements above which we chunk
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+PAD_POS = 1 << 30  # key-position sentinel: fails every mask test
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer KV cache. ``k/v``: (B, S_max, KV, hd); ``pos``: scalar count.
+
+    For sliding-window layers S_max == window and writes wrap (ring buffer).
+    """
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array  # int32 scalar — total tokens written so far
+    window: int = 0  # 0 = full cache
+
+
+jax.tree_util.register_pytree_with_keys(
+    KVCache,
+    lambda c: (
+        (
+            (jax.tree_util.GetAttrKey("k"), c.k),
+            (jax.tree_util.GetAttrKey("v"), c.v),
+            (jax.tree_util.GetAttrKey("pos"), c.pos),
+        ),
+        c.window,
+    ),
+    lambda window, kids: KVCache(kids[0], kids[1], kids[2], window),
+)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, *, window: int = 0, dtype=jnp.bfloat16
+) -> KVCache:
+    s = window or max_seq
+    kv, hd = cfg.num_kv_heads, cfg.head_dim_
+    return KVCache(
+        k=jnp.zeros((batch, s, kv, hd), dtype),
+        v=jnp.zeros((batch, s, kv, hd), dtype),
+        pos=jnp.zeros((), jnp.int32),
+        window=window,
+    )
+
+
+def _project_qkv(x, p: dict, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if "q_norm" in p:  # qwen3 qk-norm (per-head RMS over head_dim)
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int):
+    """(S, T) boolean validity from global positions."""
+    ok = k_pos[None, :] < PAD_POS if not causal else k_pos[None, :] <= q_pos[:, None]
+    if not causal:
+        ok = jnp.broadcast_to(ok, (q_pos.shape[0], k_pos.shape[0]))
+    if window:
+        ok = ok & (k_pos[None, :] > q_pos[:, None] - window)
+    return ok
+
+
+def _scores(q, k, cfg: ModelConfig, scale: float):
+    """q: (B,S,KV,G,hd), k: (B,T,KV,hd) -> (B,KV,G,S,T) f32 (capped)."""
+    s = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    if cfg.attn_softcap:
+        s = softcap(s, cfg.attn_softcap)
+    return s
+
+
+def _sdpa_plain(q, k, v, q_pos, k_pos, cfg, scale, *, causal, window):
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    q = q.reshape(b, s, kvh, h // kvh, hd)
+    sc = _scores(q, k, cfg, scale)
+    ok = _mask(q_pos, k_pos, causal=causal, window=window)
+    sc = jnp.where(ok[None, None, None], sc, NEG_INF)
+    probs = jax.nn.softmax(sc, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _sdpa_flash(q, k, v, q_pos, k_pos, cfg, scale, *, causal, window):
+    """Flash schedule: lax.map over query blocks, scan over key blocks."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    qc = min(Q_CHUNK, s)
+    kc = min(KV_CHUNK, t)
+    s_pad, t_pad = -s % qc, -t % kc
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, s_pad))
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, t_pad), constant_values=PAD_POS)
+    nq, nk = (s + s_pad) // qc, (t + t_pad) // kc
+    q_blocks = jnp.moveaxis(q.reshape(b, nq, qc, kvh, g, hd), 1, 0)
+    qpos_blocks = q_pos.reshape(nq, qc)
+    k_blocks = jnp.moveaxis(k.reshape(b, nk, kc, kvh, hd), 1, 0)
+    v_blocks = jnp.moveaxis(v.reshape(b, nk, kc, kvh, hd), 1, 0)
+    kpos_blocks = k_pos.reshape(nk, kc)
+
+    def one_q_block(args):
+        qb, qpos = args  # (B,qc,KV,G,hd), (qc,)
+
+        def kv_step(carry, xs):
+            acc, m, l = carry
+            kb, vb, kpos = xs
+            sc = _scores(qb, kb, cfg, scale)  # (B,KV,G,qc,kc) f32
+            ok = _mask(qpos, kpos, causal=causal, window=window)
+            sc = jnp.where(ok[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgsc,bckd->bkgsd", p.astype(vb.dtype), vb)
+            acc = acc * alpha[..., None].astype(acc.dtype) + pv.astype(acc.dtype)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, kvh, g, qc, hd), jnp.float32)
+        m0 = jnp.full((b, kvh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), (k_blocks, v_blocks, kpos_blocks)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)  # (B,qc,KV,G,hd)
+
+    out = jax.lax.map(one_q_block, (q_blocks, qpos_blocks))  # (nq,B,qc,KV,G,hd)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s + s_pad, h, hd)
+    return out[:, :s].astype(v.dtype)
+
+
+def _sdpa(q, k, v, q_pos, k_pos, cfg, scale, *, causal=True, window=0):
+    if q.shape[1] * k.shape[1] > FLASH_THRESHOLD:
+        return _sdpa_flash(q, k, v, q_pos, k_pos, cfg, scale, causal=causal, window=window)
+    b, s, h, hd = q.shape
+    return _sdpa_plain(q, k, v, q_pos, k_pos, cfg, scale, causal=causal, window=window)
+
+
+def attention(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    cache: Optional[KVCache] = None,
+    bidirectional: bool = False,
+) -> tuple[jax.Array, Optional[KVCache]]:
+    """Self-attention.  Returns (out, updated_cache).
+
+    Training/encoder: ``cache=None``.  Prefill: pass a zeroed cache of
+    S_max >= S; keys land at positions [0, S).  Decode: S == 1, cache holds
+    history; the new token is written at ``cache.pos`` (mod window).
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg)
+    offset = cache.pos if cache is not None else jnp.zeros((), jnp.int32)
+    positions = offset + jnp.arange(s, dtype=jnp.int32)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    scale = cfg.head_dim_**-0.5
+
+    new_cache = None
+    if cache is not None:
+        s_max = cache.k.shape[1]
+        if s > 1:
+            # Prefill (assumes an empty cache): attend over THIS call's
+            # k/v — for ring caches the early queries need keys that the
+            # ring will overwrite, so the cache is write-only here.
+            if s >= s_max:  # ring smaller than the prompt: keep the tail
+                kw, vw = k[:, -s_max:], v[:, -s_max:]
+                slots = positions[-s_max:] % s_max if cache.window else positions[-s_max:]
+            else:
+                kw, vw = k, v
+                slots = positions % s_max if cache.window else positions
+            k_all = cache.k.at[:, slots].set(kw.astype(cache.k.dtype))
+            v_all = cache.v.at[:, slots].set(vw.astype(cache.v.dtype))
+            k_all = shard(k_all, ("batch", "kv_seq", None, None))
+            v_all = shard(v_all, ("batch", "kv_seq", None, None))
+            new_cache = KVCache(k_all, v_all, offset + s, cache.window)
+            out = _sdpa(
+                q, k, v, positions, positions, cfg, scale,
+                causal=True, window=window,
+            )
+        else:
+            # Decode: write one token, attend against the cache.
+            slots = positions % s_max if cache.window else positions
+            k_all = cache.k.at[:, slots].set(k.astype(cache.k.dtype))
+            v_all = cache.v.at[:, slots].set(v.astype(cache.v.dtype))
+            k_all = shard(k_all, ("batch", "kv_seq", None, None))
+            v_all = shard(v_all, ("batch", "kv_seq", None, None))
+            new_cache = KVCache(k_all, v_all, offset + s, cache.window)
+            if cache.window:
+                # global position held by ring slot j after this write
+                j = jnp.arange(s_max, dtype=jnp.int32)
+                total = offset + s
+                wraps = jnp.where(total > j, (total - 1 - j) // s_max, 0)
+                k_pos = j + wraps * s_max
+                # slots never written yet hold zeros: mask them out
+                k_pos = jnp.where(k_pos < total, k_pos, PAD_POS)
+                win = window or s_max
+            else:
+                k_pos = jnp.arange(s_max, dtype=jnp.int32)
+                win = window
+            out = _sdpa(
+                q, k_all.astype(q.dtype), v_all.astype(q.dtype),
+                positions, k_pos, cfg, scale, causal=True, window=win,
+            )
+    else:
+        out = _sdpa(
+            q, k, v, positions, positions, cfg, scale,
+            causal=not bidirectional, window=window,
+        )
+
+    out = shard(out, ("batch", None, "heads", None))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def cross_attention(
+    x: jax.Array,
+    enc_kv: tuple[jax.Array, jax.Array],
+    p: dict,
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Decoder query over precomputed encoder K/V (B, S_enc, KV, hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k, v = enc_kv
+    t = k.shape[1]
+    q_pos = jnp.zeros((q.shape[1],), jnp.int32)
+    k_pos = jnp.zeros((t,), jnp.int32)
+    out = _sdpa(
+        q, k.astype(q.dtype), v.astype(q.dtype), q_pos, k_pos, cfg,
+        cfg.head_dim_**-0.5, causal=False, window=0,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def encode_cross_kv(enc_out: jax.Array, p: dict, cfg: ModelConfig):
+    """Project encoder output once into cross-attention K/V."""
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    if "k_norm" in p:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v

@@ -1,0 +1,59 @@
+"""Shared neural layers (pure functions over param dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (y * gain.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    if ang.ndim == 2:  # positions was (S,) -> add batch broadcast dim
+        cos, sin = cos[None], sin[None]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_in, w_gate, w_out) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, w_in)
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * h, w_out)
+
+
+def gelu_mlp(x: jax.Array, w_in, w_out) -> jax.Array:
+    return jnp.einsum(
+        "...f,fd->...d", jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in)), w_out
+    )
+
+
+def mlp(x: jax.Array, p: dict, act: str) -> jax.Array:
+    from repro.sharding import shard
+
+    if act == "swiglu" and "w_gate" in p:
+        h = jnp.einsum("...d,df->...f", x, p["w_in"])
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = shard(jax.nn.silu(g) * h, ("batch", None, "d_ff"))
+        return jnp.einsum("...f,fd->...d", h, p["w_out"])
+    h = jnp.einsum("...d,df->...f", x, p["w_in"])
+    h = shard(jax.nn.gelu(h), ("batch", None, "d_ff"))
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])

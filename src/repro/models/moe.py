@@ -1,0 +1,196 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (EP over "model").
+
+Design note (DESIGN.md §4): the token->expert dispatch is where the paper's
+LD-kernel insight *conceptually transfers* — tokens are count-sorted by
+destination expert so each expert's inputs become a contiguous dense slab
+(the ELL idea), processed by a plain dense matmul.  Compared to the GSPMD
+one-hot dispatch einsum (which materialises a (T, E, C) tensor), the
+sort-based form keeps memory at O(E*C*D + T*k):
+
+    scores -> top_k -> stable-sort (token,expert) pairs by expert
+    -> position-within-expert (capacity C drops overflow)
+    -> scatter tokens into the (E, C, D) expert slab   [all-to-all]
+    -> per-expert dense FFN (experts sharded over "model")
+    -> gather back + combine-weight sum                [all-to-all]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import mlp
+from repro.sharding import shard
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.top_k / max(cfg.num_experts, 1) * cfg.capacity_factor)
+    return max(c, cfg.top_k)
+
+
+def route(x2d: jax.Array, router_w: jax.Array, cfg: ModelConfig):
+    """Top-k routing.  x2d: (T, D).  Returns (idx (T,k), weights (T,k))."""
+    logits = jnp.einsum("td,de->te", x2d, router_w).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(gates, cfg.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)  # renorm
+    return top_i.astype(jnp.int32), top_w.astype(x2d.dtype)
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    t = b * s
+    x2 = x.reshape(t, d)
+    top_i, top_w = route(x2, p["router"], cfg)
+    e, k = cfg.num_experts, cfg.top_k
+    c = capacity(t, cfg)
+
+    flat_e = top_i.reshape(-1)                    # (T*k,)
+    tok_of = jnp.arange(t * k, dtype=jnp.int32) // k
+
+    # count-sort by expert: position within the expert's contiguous segment
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first_of_val = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - first_of_val.astype(jnp.int32)
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < c
+    slot = jnp.where(keep, pos, c)                # c = overflow bin (dropped)
+
+    # scatter into the expert slab (E, C, D) — EP all-to-all happens here
+    slab = jnp.zeros((e, c + 1, d), x.dtype)
+    slab = slab.at[flat_e, slot].add(x2[tok_of])
+    slab = shard(slab[:, :c], ("experts", None, None))
+
+    # dense per-expert FFN (einsum over the expert dim stays local under EP)
+    h = jnp.einsum("ecd,edf->ecf", slab, p["w_in"])
+    if "w_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", slab, p["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, ("experts", None, None))
+    y_slab = jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+
+    # gather back + combine
+    y_tok = y_slab[flat_e, jnp.minimum(slot, c - 1)]       # (T*k, D)
+    y_tok = jnp.where(keep[:, None], y_tok, 0.0)
+    y = (y_tok.reshape(t, k, d) * top_w[..., None]).sum(axis=1)
+    return y.reshape(b, s, d)
+
+
+def _local_dispatch_ffn(x2, top_i, top_w, p_local, cfg: ModelConfig, lo: int, e_local: int, c: int):
+    """Sort-based dispatch + dense FFN over ONE device's expert slice.
+
+    Runs inside shard_map: every array is local, so the count-sort /
+    scatter lowers to plain per-device code (no GSPMD rewrites).
+    x2: (T, D) local tokens; experts [lo, lo+e_local) live here.
+    """
+    t, d = x2.shape
+    k = cfg.top_k
+    flat_e = top_i.reshape(-1) - lo                       # (T*k,) local ids
+    in_range = (flat_e >= 0) & (flat_e < e_local)
+    key = jnp.where(in_range, flat_e, e_local)            # sort key; out = bin e_local
+    order = jnp.argsort(key, stable=True)
+    sorted_e = key[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = in_range & (pos < c)
+    slot = jnp.where(keep, pos, c)
+    e_idx = jnp.where(in_range, flat_e, e_local - 1)
+
+    tok_of = jnp.arange(t * k, dtype=jnp.int32) // k
+    slab = jnp.zeros((e_local, c + 1, d), x2.dtype)
+    slab = slab.at[e_idx, slot].add(x2[tok_of] * keep[:, None].astype(x2.dtype))
+    slab = slab[:, :c]
+
+    h = jnp.einsum("ecd,edf->ecf", slab, p_local["w_in"])
+    if "w_gate" in p_local:
+        g = jnp.einsum("ecd,edf->ecf", slab, p_local["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    y_slab = jnp.einsum("ecf,efd->ecd", h, p_local["w_out"])
+
+    y_tok = y_slab[e_idx, jnp.minimum(slot, c - 1)]
+    y_tok = jnp.where(keep[:, None], y_tok, 0.0)
+    y = (y_tok.reshape(t, k, d) * top_w[..., None]).sum(axis=1)
+    return y
+
+
+def moe_ffn_dist(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Production MoE: shard_map over the mesh.
+
+    Activations are batch-sharded over ("pod","data") and replicated over
+    "model"; experts are sharded over "model" (EP).  Each device therefore
+    already holds every token it could need — dispatch is a *local*
+    count-sort + gather onto its expert slice, and the only collective is
+    the per-layer psum over "model" (the exact TP-MLP pattern).  FSDP
+    weight shards are re-gathered by shard_map's in_specs resharding.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import current_ctx
+
+    ctx = current_ctx()
+    mesh = ctx.mesh
+    n_shards = mesh.shape["model"]
+    if cfg.num_experts % n_shards != 0:
+        return moe_ffn(x, p, cfg)
+    e_local = cfg.num_experts // n_shards
+    bs_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    bs = bs_axes if len(bs_axes) > 1 else bs_axes[0]
+    b, s, d = x.shape
+
+    def body(xb, router, w_in, w_gate, w_out):
+        bl = xb.shape[0]
+        t = bl * s
+        x2 = xb.reshape(t, d)
+        top_i, top_w = route(x2, router, cfg)  # identical on every model shard
+        me = jax.lax.axis_index("model")
+        lo = (me * e_local).astype(jnp.int32)
+        c = capacity(t, cfg)
+        p_local = {"w_in": w_in, "w_out": w_out}
+        if w_gate is not None:
+            p_local["w_gate"] = w_gate
+        y = _local_dispatch_ffn(x2, top_i, top_w, p_local, cfg, lo, e_local, c)
+        y = jax.lax.psum(y, "model")
+        return y.reshape(bl, s, d)
+
+    w_gate = p.get("w_gate")
+    in_specs = (
+        P(bs, None, None),
+        P(None, None),
+        P("model", None, None),
+        P("model", None, None) if w_gate is not None else None,
+        P("model", None, None),
+    )
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=P(bs, None, None),
+        check_rep=False,
+    )(x, p["router"], p["w_in"], w_gate, p["w_out"])
+
+
+def moe_apply(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Dispatch to the shard_map path when a mesh context is active."""
+    from repro.sharding import current_ctx
+
+    if current_ctx() is not None:
+        return moe_ffn_dist(x, p, cfg)
+    return moe_ffn(x, p, cfg)
+
+
+def aux_load_balance_loss(x2d: jax.Array, router_w: jax.Array, cfg: ModelConfig):
+    """Switch-style load-balancing auxiliary loss (mean gate * mean count)."""
+    logits = jnp.einsum("td,de->te", x2d, router_w).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(gates, axis=-1)
+    e = cfg.num_experts
+    counts = jnp.zeros((e,), jnp.float32).at[top1].add(1.0) / x2d.shape[0]
+    return e * jnp.sum(counts * gates.mean(axis=0))

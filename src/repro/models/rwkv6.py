@@ -1,0 +1,190 @@
+"""RWKV-6 "Finch" time-mix + channel-mix (arXiv:2404.05892), in JAX.
+
+Per head (head size ``hs``), with data-dependent per-channel decay
+``w_t = exp(-exp(w0 + tanh(x_t A) B))``:
+
+    y_t = ( S_{t-1} + (u ⊙ k_t) v_tᵀ )ᵀ r_t
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+Two execution forms, numerically identical (tests assert allclose):
+
+  * ``scan``     — ``lax.scan`` over time, O(1) state: the decode path and
+                   the paper-faithful-style training baseline.
+  * ``chunked``  — O(T/C) sequential steps of dense intra-chunk matmuls
+                   (the linear-attention chunk trick): inter-chunk state is
+                   carried like scan, intra-chunk contributions become
+                   causal matmuls that feed the MXU.  This is the
+                   beyond-paper perf form used in §Perf.
+
+Chunked-form numerics: decay factors are exponentials of per-channel
+cumulative logs; all carry/state factors have non-positive exponents (safe),
+and the intra-chunk attention is stabilised around the chunk-midpoint
+cumulant so both factors stay < e^(C/2 * |log w|_max).  ``log w`` is clamped
+at -8 (decay < 3e-4 is numerically dead anyway), bounding exponents by
+C/2 * 8 < 88 for the default C=16.
+
+Token-shift: every projection sees ``lerp(x_t, x_{t-1}, mu)``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+LOGW_FLOOR = -8.0
+
+# §Perf toggle: force the sequential lax.scan recurrence for training
+# shapes (the baseline the chunked form is measured against).
+FORCE_SCAN = False
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """x: (B,S,D) -> x shifted right by one; ``prev`` is the carry (B,D)."""
+    if prev is None:
+        p = jnp.zeros_like(x[:, :1])
+    else:
+        p = prev[:, None]
+    return jnp.concatenate([p, x[:, :-1]], axis=1)
+
+
+def _projections(x: jax.Array, p: dict, cfg: ModelConfig, x_prev):
+    xs = _token_shift(x, x_prev)
+    mix = lambda mu: x + (xs - x) * mu  # lerp with learned per-channel mu
+    r = jnp.einsum("bsd,de->bse", mix(p["mu"]["r"]), p["wr"])
+    k = jnp.einsum("bsd,de->bse", mix(p["mu"]["k"]), p["wk"])
+    v = jnp.einsum("bsd,de->bse", mix(p["mu"]["v"]), p["wv"])
+    g = jnp.einsum("bsd,de->bse", mix(p["mu"]["g"]), p["wg"])
+    # data-dependent decay (low-rank LoRA): log w = -exp(w0 + tanh(x A) B)
+    lora = jnp.einsum(
+        "bsl,ld->bsd",
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", mix(p["mu"]["w"]), p["wa"])),
+        p["wb"],
+    )
+    logw = -jnp.exp((p["w0"] + lora).astype(jnp.float32))
+    logw = jnp.maximum(logw, LOGW_FLOOR)
+    nh = cfg.mixer_heads_
+    hs = cfg.d_model // nh
+    shp = lambda a: a.reshape(a.shape[0], a.shape[1], nh, hs)
+    return shp(r), shp(k), shp(v), g, shp(logw)
+
+
+def _finalize(y: jax.Array, g: jax.Array, p: dict, cfg: ModelConfig, dtype):
+    b, s = y.shape[:2]
+    y = y.reshape(b, s, cfg.d_model).astype(jnp.float32)
+    # per-head group norm
+    nh = cfg.mixer_heads_
+    yh = y.reshape(b, s, nh, -1)
+    yh = (yh - yh.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yh.var(-1, keepdims=True) + 1e-5
+    )
+    y = (yh.reshape(b, s, cfg.d_model) * p["ln_x"]).astype(dtype)
+    y = y * jax.nn.silu(g)
+    return jnp.einsum("bsd,de->bse", y, p["wo"])
+
+
+def init_state(cfg: ModelConfig, batch: int) -> dict:
+    nh = cfg.mixer_heads_
+    hs = cfg.d_model // nh
+    return {
+        "s": jnp.zeros((batch, nh, hs, hs), jnp.float32),
+        "x_prev": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+        "ffn_prev": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+    }
+
+
+def time_mix_scan(
+    x: jax.Array, p: dict, cfg: ModelConfig, state: Optional[dict] = None
+):
+    """lax.scan over time.  Returns (out (B,S,D), new_state)."""
+    b, s, d = x.shape
+    nh = cfg.mixer_heads_
+    hs = d // nh
+    x_prev = state["x_prev"].astype(x.dtype) if state else None
+    r, k, v, g, logw = _projections(x, p, cfg, x_prev)
+    u = p["u"].astype(jnp.float32)
+    s0 = state["s"] if state else jnp.zeros((b, nh, hs, hs), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = (a.astype(jnp.float32) for a in inp)  # (B,nh,hs)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhij,bhi->bhj", S + u[..., :, None] * kv, r_t)
+        S = jnp.exp(lw_t)[..., :, None] * S + kv
+        return S, y
+
+    seq = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, logw))
+    s_fin, ys = jax.lax.scan(step, s0, seq)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,nh,hs)
+    out = _finalize(y, g, p, cfg, x.dtype)
+    return out, {"s": s_fin, "x_prev": x[:, -1]}
+
+
+def time_mix_chunked(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    state: Optional[dict] = None,
+    chunk: int = 16,
+):
+    """Chunked parallel form: identical math, O(T/chunk) sequential steps."""
+    b, s, d = x.shape
+    nh = cfg.mixer_heads_
+    hs = d // nh
+    x_prev = state["x_prev"].astype(x.dtype) if state else None
+    r, k, v, g, logw = _projections(x, p, cfg, x_prev)
+    u = p["u"].astype(jnp.float32)
+    s0 = state["s"] if state else jnp.zeros((b, nh, hs, hs), jnp.float32)
+
+    pad = (-s) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = map(zp, (r, k, v, logw))
+        # padded logw = 0 (w = 1): state passes through unchanged
+    n_ch = (s + pad) // chunk
+
+    def to_chunks(a):  # (B, S, nh, hs) -> (n_ch, B, C, nh, hs)
+        return jnp.moveaxis(a.reshape(b, n_ch, chunk, nh, hs), 1, 0)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, logw))
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def chunk_step(S, inp):
+        r_, k_, v_, lw = (a.astype(jnp.float32) for a in inp)  # (B,C,nh,hs)
+        cum = jnp.cumsum(lw, axis=1)                  # log W_t (inclusive)
+        w_prev = jnp.exp(cum - lw)                    # W_{t-1} <= 1
+        # carry-in: y_t += (r_t ⊙ W_{t-1}) · S_in
+        y = jnp.einsum("bchi,bhij->bchj", r_ * w_prev, S)
+        # intra-chunk attention, stabilised at the chunk midpoint cumulant
+        m = cum[:, chunk // 2][:, None]               # (B,1,nh,hs)
+        qa = r_ * jnp.exp(cum - lw - m)
+        ka = k_ * jnp.exp(m - cum)
+        att = jnp.einsum("bchi,bdhi->bhcd", qa, ka)
+        att = jnp.where(tri[None, None], att, 0.0)    # strict causal (j < t)
+        y = y + jnp.einsum("bhcd,bdhj->bchj", att, v_)
+        # diagonal bonus term
+        diag = jnp.einsum("bchi,bchi->bch", r_ * u[None, None], k_)
+        y = y + diag[..., None] * v_
+        # state carry-out: S' = W_C S + Σ_j (W_C/W_j) k_j v_jᵀ
+        w_total = jnp.exp(cum[:, -1])                 # (B,nh,hs)
+        k_state = k_ * jnp.exp(cum[:, -1][:, None] - cum)  # exponent <= 0
+        S = w_total[..., :, None] * S + jnp.einsum("bchi,bchj->bhij", k_state, v_)
+        return S, y
+
+    s_fin, ys = jax.lax.scan(chunk_step, s0, (rc, kc, vc, lwc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, n_ch * chunk, nh, hs)[:, :s]
+    out = _finalize(y, g, p, cfg, x.dtype)
+    return out, {"s": s_fin, "x_prev": x[:, -1]}
+
+
+def channel_mix(x: jax.Array, p: dict, prev: Optional[jax.Array] = None):
+    """RWKV channel-mix FFN: r-gated squared-ReLU.  Returns (out, carry)."""
+    xs = _token_shift(x, None if prev is None else prev.astype(x.dtype))
+    mix = lambda mu: x + (xs - x) * mu
+    kx = mix(p["mu_k"])
+    rx = mix(p["mu_r"])
+    h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", kx, p["w_k"])))
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_v"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", rx, p["w_r"]))
+    return r * out, x[:, -1]

@@ -1,0 +1,333 @@
+"""The generic LM stack: assembles attention / MoE / RWKV6 / RG-LRU layers
+per the config's layer pattern, with scan-over-super-blocks + remat.
+
+Entry points
+------------
+``model_forward(params, cfg, tokens, ...)``
+    (B, S) tokens -> (B, S, V) logits; optionally threads a cache pytree
+    (prefill/decode).  ``decode=True`` means S == 1 against the cache.
+
+``init_cache_tree(cfg, batch, max_seq)``
+    cache pytree matching the scan structure (stacked per super-block).
+
+Layer scan: layers are grouped into super-blocks of ``cfg.pattern_period``
+heterogeneous positions (see configs.base.stack_layers); ``lax.scan`` runs
+over the stacked super-blocks so the HLO contains each distinct layer kind
+once — 95-layer models compile in seconds, which the multi-pod dry-run
+depends on.
+
+Attention uses a chunked online-softmax path (flash-attention schedule in
+pure lax, see attention._sdpa) whenever S*T would materialise more than
+``FLASH_THRESHOLD`` score elements per head — the 32k/500k shapes are
+impossible without it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6
+from repro.models.attention import (
+    KVCache,
+    attention,
+    cross_attention,
+    encode_cross_kv,
+    init_cache,
+)
+from repro.models.layers import mlp, rms_norm, softcap
+from repro.models.moe import moe_apply
+from repro.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Per-layer application
+# ---------------------------------------------------------------------------
+
+def apply_layer(
+    x: jax.Array,
+    lp: dict,
+    cfg: ModelConfig,
+    kind: str,
+    is_moe: bool,
+    cache: Optional[dict],
+    enc_out: Optional[jax.Array],
+    decode: bool,
+):
+    """One residual layer.  Returns (x, new_cache_entry)."""
+    new_cache: dict = {}
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if kind in ("global", "local"):
+        window = cfg.sliding_window if kind == "local" else 0
+        kv_cache = cache.get("kv") if cache else None
+        out, nc = attention(h, lp["attn"], cfg, window=window, cache=kv_cache)
+        if nc is not None:
+            new_cache["kv"] = nc
+    elif kind == "cross+global":
+        kv_cache = cache.get("kv") if cache else None
+        out, nc = attention(h, lp["attn"], cfg, cache=kv_cache)
+        if nc is not None:
+            new_cache["kv"] = nc
+        x = x + out.astype(x.dtype)
+        h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        if cache is not None and decode:
+            ckv = (cache["ck"], cache["cv"])
+        else:
+            ckv = encode_cross_kv(enc_out, lp["cross"], cfg)
+        if cache is not None:
+            new_cache["ck"], new_cache["cv"] = ckv
+        out = cross_attention(h, ckv, lp["cross"], cfg)
+    elif kind == "rwkv":
+        st = cache.get("mix") if cache else None
+        if decode or rwkv6.FORCE_SCAN or (st is not None and x.shape[1] <= 4):
+            out, ns = rwkv6.time_mix_scan(h, lp["rwkv"], cfg, st)
+        else:
+            out, ns = rwkv6.time_mix_chunked(h, lp["rwkv"], cfg, st)
+        if cache is not None:
+            new_cache["mix"] = ns
+    elif kind == "rglru":
+        st = cache.get("rec") if cache else None
+        out, ns = rglru_mod.rglru_block(h, lp["rglru"], cfg, st, decode=decode)
+        if cache is not None:
+            new_cache["rec"] = ns
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    x = x + out.astype(x.dtype)
+    x = shard(x, ("batch", "seq_shard", None))
+
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if is_moe:
+        out = moe_apply(h, lp["moe"], cfg)
+    elif kind == "rwkv":
+        prev = cache.get("ffn_prev") if cache else None
+        out, carry = rwkv6.channel_mix(h, lp["ffn"], prev)
+        if cache is not None:
+            new_cache["ffn_prev"] = carry
+    else:
+        out = mlp(h, lp["ffn"], cfg.act)
+    x = x + out.astype(x.dtype)
+    return shard(x, ("batch", "seq_shard", None)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (mirrors the scan structure)
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int, dtype):
+    c: dict[str, Any] = {}
+    if kind in ("global", "local", "cross+global"):
+        window = cfg.sliding_window if kind == "local" else 0
+        window = min(window, max_seq) if window else 0
+        c["kv"] = init_cache(cfg, batch, max_seq, window=window, dtype=dtype)
+        # shard the cache along seq over "model" (flash-decode layout):
+        # kv_heads (<=8) never divides model=16, the seq dim always does.
+        c["kv"] = KVCache(
+            shard(c["kv"].k, ("batch", "kv_seq", None, None)),
+            shard(c["kv"].v, ("batch", "kv_seq", None, None)),
+            c["kv"].pos,
+            c["kv"].window,
+        )
+    if kind == "cross+global":
+        kv, hd = cfg.num_kv_heads, cfg.head_dim_
+        enc_s = cfg.encoder_seq or cfg.cross_seq
+        c["ck"] = jnp.zeros((batch, enc_s, kv, hd), dtype)
+        c["cv"] = jnp.zeros((batch, enc_s, kv, hd), dtype)
+    if kind == "rwkv":
+        st = rwkv6.init_state(cfg, batch)
+        c["mix"] = {"s": st["s"], "x_prev": st["x_prev"]}
+        c["ffn_prev"] = st["ffn_prev"]
+    if kind == "rglru":
+        c["rec"] = rglru_mod.init_state(cfg, batch)
+    return c
+
+
+def init_cache_tree(
+    cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16
+) -> dict:
+    kinds = cfg.layer_kinds()
+    period = cfg.pattern_period
+    n_super, _ = divmod(cfg.num_layers, period)
+    mk = lambda kind: _layer_cache(cfg, kind, batch, max_seq, dtype)
+    if n_super <= 1:
+        return {"blocks": None, "tail": [mk(k) for k in kinds]}
+    stack = lambda tree: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_super,) + x.shape), tree
+    )
+    blocks = [stack(mk(kinds[t])) for t in range(period)]
+    tail = [mk(k) for k in kinds[n_super * period :]]
+    return {"blocks": blocks, "tail": tail}
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def run_encoder(enc_params: dict, enc_input: jax.Array, cfg: ModelConfig):
+    """Bidirectional encoder over stub frontend embeddings (B, S_enc, D)."""
+    x = enc_input + enc_params["pos_embed"][None, : enc_input.shape[1]].astype(
+        enc_input.dtype
+    )
+    for lp in enc_params["layers"]:
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        out, _ = attention(h, lp["attn"], cfg, bidirectional=True)
+        x = x + out.astype(x.dtype)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp(h, lp["ffn"], cfg.act).astype(x.dtype)
+    return rms_norm(x, enc_params["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def model_forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    enc_input: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,
+    decode: bool = False,
+    remat: bool = False,
+    remat_group: int = 1,
+    last_only: bool = False,
+):
+    """tokens (B, S) -> logits (B, S, V).  Returns (logits, new_cache)."""
+    kinds = cfg.layer_kinds()
+    period = cfg.pattern_period
+    n_super, _ = divmod(cfg.num_layers, period)
+
+    # fp32-master scheme: f32 stored params are cast to the compute dtype
+    # at use.  The cast happens PER BLOCK inside the layer scan (casting
+    # the whole tree up front materialises a full bf16 copy of the model
+    # — +3.1 GB/device on the 400B arch, measured in §Perf).
+    cast = lambda t: jax.tree.map(
+        lambda a: a.astype(cfg.dtype) if a.dtype == jnp.float32 else a, t
+    )
+    params = dict(params)
+    for k in ("embed", "final_norm", "lm_head", "encoder"):
+        if params.get(k) is not None:
+            params[k] = cast(params[k])
+    if params.get("tail"):
+        params["tail"] = cast(params["tail"])
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    x = shard(x, ("batch", "seq_shard", None))
+
+    enc_out = None
+    if cfg.encoder_layers and enc_input is not None:
+        enc_out = run_encoder(params["encoder"], enc_input, cfg)
+    elif cfg.cross_seq and enc_input is not None:
+        enc_out = enc_input  # vlm: stub patch embeddings are the "encoder"
+
+    has_cache = cache is not None
+
+    def block_body(x, block_params, block_cache):
+        block_params = cast(block_params)  # per-block f32 -> bf16
+        new_entries = []
+        for t in range(period):
+            lc = block_cache[t] if has_cache else None
+            x, nc = apply_layer(
+                x,
+                block_params[t],
+                cfg,
+                kinds[t],
+                cfg.is_moe_layer(t),
+                lc,
+                enc_out,
+                decode,
+            )
+            new_entries.append(nc)
+        return x, tuple(new_entries)
+
+    if remat:
+        block_body = jax.checkpoint(
+            block_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    new_cache: dict = {"blocks": None, "tail": []}
+    if params.get("blocks") is not None and n_super > 1:
+
+        def scan_fn(x, xs):
+            bp, bc = xs
+            x, nc = block_body(x, bp, bc)
+            return x, nc
+
+        bc = tuple(cache["blocks"]) if has_cache else tuple(
+            jnp.zeros((n_super,)) for _ in range(period)
+        )
+        if remat_group > 1 and not has_cache:
+            # Grouped remat (scan-over-scan checkpointing): the residual
+            # stream is saved once per GROUP of ``remat_group``
+            # super-blocks instead of per block — sqrt(L)-style memory at
+            # the same recompute budget (each group's chain is replayed
+            # once during its backward; blocks inside stay per-block
+            # rematerialised).  SP residual sharding was measured to cost
+            # 11-24x collective volume for the same purpose (§Perf).
+            g = remat_group
+            n_grp, rem = divmod(n_super, g)
+
+            def group_fn(x, xs):
+                bp, _ = xs
+                x, _ = jax.lax.scan(scan_fn, x, (bp, tuple(
+                    jnp.zeros((g,)) for _ in range(period))))
+                return x, ()
+
+            group_fn = jax.checkpoint(
+                group_fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+            head = jax.tree.map(
+                lambda a: a[: n_grp * g].reshape((n_grp, g) + a.shape[1:]),
+                tuple(params["blocks"]),
+            )
+            x, _ = jax.lax.scan(
+                group_fn, x, (head, jnp.zeros((n_grp,)))
+            )
+            if rem:
+                tail_blocks = jax.tree.map(
+                    lambda a: a[n_grp * g :], tuple(params["blocks"])
+                )
+                x, _ = jax.lax.scan(
+                    scan_fn, x,
+                    (tail_blocks, tuple(jnp.zeros((rem,)) for _ in range(period))),
+                )
+        else:
+            x, stacked_nc = jax.lax.scan(
+                scan_fn, x, (tuple(params["blocks"]), bc)
+            )
+            if has_cache:
+                new_cache["blocks"] = list(stacked_nc)
+    elif params.get("blocks") is not None:  # n_super == 1, unscanned
+        bc = tuple(cache["blocks"]) if has_cache else (None,) * period
+        x, nc = block_body(x, tuple(params["blocks"]), bc)
+        if has_cache:
+            new_cache["blocks"] = list(nc)
+
+    # tail (pattern remainder) + fully-unstacked models
+    tail_params = params.get("tail") or []
+    n_body = n_super * period if n_super > 1 or params.get("blocks") else 0
+    for i, lp in enumerate(tail_params):
+        li = n_body + i
+        lc = cache["tail"][i] if has_cache else None
+        x, nc = apply_layer(
+            x, lp, cfg, kinds[li], cfg.is_moe_layer(li), lc, enc_out, decode
+        )
+        new_cache["tail"].append(nc)
+
+    if last_only:
+        x = x[:, -1:]  # prefill: only the last position feeds the LM head
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    if cfg.final_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    logits = shard(logits, ("batch", None, "vocab"))
+    return logits, (new_cache if has_cache else None)

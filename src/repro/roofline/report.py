@@ -1,0 +1,164 @@
+"""Roofline report builder (deliverable g).
+
+Reads the dry-run artifacts (experiments/dryrun/<mesh>/<arch>__<shape>.json)
+and derives, per (arch x shape x mesh):
+
+    compute term    = dot_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = traffic_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(= the brief's global formulas: per-device numbers already divide by chip
+count since the parsed HLO is the per-device SPMD module.)
+
+Plus MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N_active*B (decode)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    PYTHONPATH=src python -m repro.roofline.report [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per chip ICI
+
+ART_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def model_flops(arch: str, shape: str, devices: int) -> float:
+    """Per-device useful FLOPs for the step this cell lowers."""
+    if arch == "groot-gnn":
+        # GraphSAGE inference over one re-grown partition per device:
+        # L layers x (7 dense matmuls (self + 6 groups) + 6 edge
+        # aggregations), unpadded node/edge counts.
+        from repro.launch.steps import GROOT_SHAPES
+
+        gcfg = get_config(arch)
+        bits, batch = GROOT_SHAPES[shape]
+        nodes = 8.0 * bits * bits * batch
+        edges = 2 * nodes
+        h = gcfg.gnn.hidden
+        layers = gcfg.gnn.num_layers
+        per_graph = layers * (7 * 2 * nodes * h * h + 6 * 2 * edges * h)
+        return per_graph / devices
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        total = 6.0 * n_active * tokens
+    elif sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * sh.global_batch
+    return total / devices
+
+
+def load_records(mesh: str) -> list:
+    out = []
+    d = ART_DIR / mesh
+    if not d.exists():
+        return out
+    for p in sorted(d.glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def terms(rec: dict) -> dict:
+    h = rec["hlo"]
+    compute = h["dot_flops_per_device"] / PEAK_FLOPS
+    memory = h["traffic_bytes_per_device"] / HBM_BW
+    collective = h["collective_bytes_per_device"] / LINK_BW
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(rec["arch"], rec["shape"], rec["devices"])
+    hlo_f = h["dot_flops_per_device"]
+    bound = max(compute, memory, collective)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_ratio": (mf / hlo_f) if hlo_f else 0.0,
+        # roofline fraction: useful work over the time the dominant
+        # bottleneck enforces (peak-compute-normalised)
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+    }
+
+
+def build_table(mesh: str) -> list:
+    rows = []
+    for rec in load_records(mesh):
+        t = terms(rec)
+        mem = rec.get("memory_analysis", {})
+        rows.append(
+            {
+                "arch": rec["arch"],
+                "shape": rec["shape"],
+                "mesh": rec["mesh"],
+                "devices": rec["devices"],
+                "compile_s": rec["timing"]["compile_s"],
+                "hbm_gb_per_dev": round(
+                    (
+                        mem.get("argument_size_in_bytes", 0)
+                        + mem.get("temp_size_in_bytes", 0)
+                    )
+                    / 1e9,
+                    2,
+                ),
+                **{
+                    k: (round(v, 4) if isinstance(v, float) else v)
+                    for k, v in t.items()
+                },
+            }
+        )
+    return rows
+
+
+def to_markdown(rows: list) -> str:
+    hdr = (
+        "| arch | shape | mesh | HBM GB/dev | compute s | memory s | "
+        "collective s | dominant | useful ratio | roofline frac |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['hbm_gb_per_dev']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.4f} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=("pod", "multipod"))
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = build_table(args.mesh)
+    if args.json:
+        print(json.dumps(rows, indent=1))
+    else:
+        print(to_markdown(rows))
+    out = ART_DIR.parent / f"roofline_{args.mesh}.json"
+    out.write_text(json.dumps(rows, indent=1))
+    print(f"[saved {out}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Serving steps: prefill (build cache + first logits) and decode (one
+token against the cache).  The shapes brief:
+
+  * ``prefill_32k``  lowers ``prefill_step`` (S = 32768 causal forward
+    that also writes the KV cache),
+  * ``decode_32k`` / ``long_500k`` lower ``serve_step`` (one new token,
+    cache of seq_len).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import init_cache_tree, model_forward
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    """(params, tokens (B,S), enc_input?) -> (last_logits (B,V), cache)."""
+
+    def prefill_step(params, tokens, enc_input=None):
+        cache = init_cache_tree(cfg, tokens.shape[0], max_seq, dtype=jnp.bfloat16)
+        logits, cache = model_forward(
+            params, cfg, tokens, enc_input=enc_input, cache=cache, last_only=True
+        )
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, cache, token (B,1)) -> (next_token (B,1), logits, cache)."""
+
+    def serve_step(params, cache, token):
+        logits, cache = model_forward(
+            params, cfg, token, cache=cache, decode=True
+        )
+        if cfg.padded_vocab != cfg.vocab_size:  # never sample pad ids
+            col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+            logits = jnp.where(col < cfg.vocab_size, logits, -jnp.inf)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, logits[:, -1], cache
+
+    return serve_step
+
+
+def greedy_generate(
+    params,
+    cfg: ModelConfig,
+    prompt: jax.Array,
+    steps: int,
+    *,
+    max_seq: Optional[int] = None,
+    enc_input=None,
+):
+    """Reference generation loop (prefill + scan of decode steps)."""
+    b, s = prompt.shape
+    max_seq = max_seq or (s + steps)
+    prefill = make_prefill_step(cfg, max_seq)
+    serve = make_serve_step(cfg)
+    last_logits, cache = prefill(params, prompt, enc_input)
+    tok0 = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
+
+    def step(carry, _):
+        tok, cache = carry
+        nxt, _, cache = serve(params, cache, tok)
+        return (nxt, cache), tok
+
+    (_, _), toks = jax.lax.scan(step, (tok0, cache), None, length=steps)
+    return jnp.moveaxis(toks[..., 0], 0, 1)  # (B, steps)

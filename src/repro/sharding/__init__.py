@@ -1,0 +1,9 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingCtx,
+    current_ctx,
+    make_rules,
+    shard,
+    sharding_for_spec,
+    tree_shardings,
+    use_sharding,
+)

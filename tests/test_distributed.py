@@ -1,0 +1,208 @@
+"""Multi-device distribution tests.
+
+These need >1 device, so each test runs a small script in a subprocess
+with ``--xla_force_host_platform_device_count=8`` (the main test process
+must keep seeing 1 device — per the brief, the 512-device override belongs
+to the dry-run only).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_subprocess(code: str, devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=420,
+        cwd=REPO,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    """The distributed train step (2x4 mesh, FSDP+TP, microbatching) and
+    the unsharded step produce the same loss and parameter update."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.configs.base import materialize, model_spec_tree
+        from repro.sharding.rules import make_rules, tree_shardings, use_sharding
+        from repro.training import optimizer as opt_mod
+        from repro.training.train_step import make_train_step
+
+        cfg = get_config("qwen3-8b", smoke=True)
+        spec = model_spec_tree(cfg)
+        params = materialize(spec, jax.random.key(0), jnp.float32)
+        opt = opt_mod.AdamW(lr=1e-3)
+        tokens = jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab_size, (8, 33)), jnp.int32)
+        batch = {"tokens": tokens}
+
+        # single device reference
+        step = make_train_step(cfg, opt, microbatches=2)
+        p1, _, m1 = jax.jit(step)(params, opt.init(params), batch)
+
+        # sharded
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = make_rules(mesh, fsdp=True)
+        shard_tree = tree_shardings(spec, mesh, rules)
+        with use_sharding(mesh, fsdp=True):
+            ps = jax.device_put(params, shard_tree)
+            p2, _, m2 = jax.jit(step)(ps, opt.init(ps), batch)
+
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=2e-3)
+        d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), p1, p2)
+        assert max(jax.tree.leaves(d)) < 5e-3, max(jax.tree.leaves(d))
+        print("sharded == single-device: OK")
+    """)
+
+
+def test_shard_map_moe_matches_dense_path():
+    """moe_ffn_dist (shard_map EP) == moe_ffn (single-device reference)."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from repro.configs import get_config
+        from repro.configs.base import materialize, param_tree
+        from repro.models.moe import moe_ffn, moe_ffn_dist
+        from repro.sharding.rules import use_sharding
+
+        cfg = dataclasses.replace(
+            get_config("qwen3-moe-235b-a22b", smoke=True),
+            num_experts=8, top_k=2, capacity_factor=8.0)
+        p = materialize(param_tree(cfg)["layers"][0]["moe"], jax.random.key(1),
+                        jnp.float32)
+        x = jax.random.normal(jax.random.key(2), (4, 8, cfg.d_model), jnp.float32)
+        want = moe_ffn(x, p, cfg)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with use_sharding(mesh):
+            got = jax.jit(lambda x: moe_ffn_dist(x, p, cfg))(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+        print("shard_map MoE == dense reference: OK")
+    """)
+
+
+def test_pipeline_parallel_matches_sequential():
+    """GPipe ppermute schedule == applying the stages sequentially."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np, functools
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.pipeline_parallel import pipeline_apply
+
+        n_stages, n_micro, b, d = 4, 8, 2, 16
+        mesh = jax.make_mesh((n_stages,), ("stage",))
+        ws = jax.random.normal(jax.random.key(0), (n_stages, d, d)) * 0.3
+
+        def stage_fn(w, x):
+            return jnp.tanh(x @ w)
+
+        x_mb = jax.random.normal(jax.random.key(1), (n_micro, b, d))
+
+        # sequential reference
+        want = x_mb
+        for s in range(n_stages):
+            want = jax.vmap(lambda xx: stage_fn(ws[s], xx))(want)
+
+        fn = shard_map(
+            functools.partial(pipeline_apply, stage_fn, axis="stage"),
+            mesh=mesh,
+            in_specs=(P("stage"), P()),
+            out_specs=P(),
+            check_rep=False,
+        )
+        got = jax.jit(fn)(ws, x_mb)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        print("pipeline == sequential: OK")
+    """)
+
+
+def test_grad_compression_error_feedback():
+    """int8 psum with error feedback: biased per step, unbiased over steps;
+    compression ratio ~0.26."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np, functools
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.grad_compression import (
+            compressed_psum, compression_ratio, init_error_state)
+
+        mesh = jax.make_mesh((4,), ("pods",))
+        g_all = jax.random.normal(jax.random.key(0), (4, 64, 128))
+        grads = {"w": g_all}
+        err = init_error_state({"w": g_all[0]})
+
+        def body(g, e):
+            out, e2 = compressed_psum({"w": g[0]}, "pods", {"w": e})
+            return out["w"], e2["w"][None]
+
+        fn = shard_map(body, mesh=mesh, in_specs=(P("pods"), P()),
+                       out_specs=(P(), P("pods")), check_rep=False)
+        out, err2 = jax.jit(fn)(g_all, err["w"])
+        want = g_all.mean(0)
+        # single-shot int8 psum: close but quantised
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=0.05)
+        # error feedback captured the residual
+        assert float(jnp.abs(err2).max()) > 0
+        r = compression_ratio({"w": g_all[0]})
+        assert r < 0.3, r
+        print("compressed psum: OK, ratio", r)
+    """)
+
+
+def test_elastic_mesh_choice():
+    run_subprocess("""
+        from repro.distributed.elastic import choose_mesh, replan_batch
+        m = choose_mesh(8, prefer_model=4)
+        assert dict(m.shape) == {"data": 2, "model": 4}, dict(m.shape)
+        m2 = choose_mesh(6, prefer_model=4)   # degraded topology
+        assert dict(m2.shape) == {"data": 3, "model": 2}
+        plan = replan_batch(96, old_data=4, new_data=3)
+        assert plan["per_device_batch_new"] == 32
+        print("elastic mesh: OK")
+    """)
+
+
+def test_dryrun_cell_compiles_on_tiny_mesh():
+    """The dry-run cell builder lowers+compiles on a small (2,4) mesh —
+    the same path the 512-chip run takes, runnable in CI."""
+    run_subprocess("""
+        import jax
+        from repro.configs import get_config
+        from repro.launch.steps import build_cell
+        from repro.launch.dryrun import run_cell
+        from jax.sharding import Mesh
+        import numpy as np
+        # note: importing repro.launch.dryrun sets the 512-device flag
+        # (its brief-mandated first lines); use the first 8 devices.
+        mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4), ("data", "model"))
+        cfg = get_config("qwen3-8b", smoke=True)
+        import dataclasses
+        # shrink the shape grid to smoke scale by monkeypatching SHAPES
+        from repro.configs import shapes as S
+        small = {"train_4k": S.ShapeSpec("train_4k", 64, 8, "train"),
+                 "decode_32k": S.ShapeSpec("decode_32k", 64, 8, "decode")}
+        S.SHAPES.clear(); S.SHAPES.update(small)
+        for shape in ("train_4k", "decode_32k"):
+            cell = build_cell(cfg, shape, mesh)
+            rec = run_cell(cell, mesh, "test", save=False)
+            assert rec["hlo"]["dot_flops_per_device"] > 0
+        print("tiny-mesh dryrun cells: OK")
+    """)

@@ -1,0 +1,239 @@
+"""Infrastructure tests: checkpointing, fault tolerance, data pipeline,
+optimizers, sharding rules, HLO roofline parser."""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager, latest_step, restore, save
+from repro.distributed.fault_tolerance import Heartbeat, ResilientLoop
+from repro.roofline.hlo import analyze
+from repro.training import optimizer as opt_mod
+from repro.training.data import TokenStream, TokenStreamConfig
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {
+        "w": jnp.arange(12.0).reshape(3, 4),
+        "layers": [{"a": jnp.ones((2, 2))}, {"a": jnp.zeros((2, 2))}],
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    save(tree, tmp_path, 5)
+    got, step = restore(jax.tree.map(jnp.zeros_like, tree), tmp_path)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity_ignores_partial(tmp_path):
+    tree = _tree()
+    save(tree, tmp_path, 1)
+    # a crashed write leaves only a .tmp dir -> must be ignored
+    (tmp_path / "step_000000009.tmp").mkdir()
+    assert latest_step(tmp_path) == 1
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save_async(tree, s)
+    mgr.wait()
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in tmp_path.iterdir()
+        if p.name.startswith("step_") and not p.name.endswith(".tmp")
+    )
+    assert steps == [3, 4]  # keep=2
+    assert mgr.save_count == 4
+
+
+def test_restore_with_resharding(tmp_path):
+    """Elastic restart: restore onto explicit (here trivial) shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = _tree()
+    save(tree, tmp_path, 0)
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+    got, _ = restore(jax.tree.map(jnp.zeros_like, tree), tmp_path, shardings=sh)
+    assert got["w"].sharding == NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Resilient loop
+# ---------------------------------------------------------------------------
+
+def test_resilient_loop_runs_and_checkpoints(tmp_path):
+    def step(state, batch):
+        return state + batch, {"loss": float(state)}
+
+    loop = ResilientLoop(
+        step, jnp.zeros(()), ckpt_dir=str(tmp_path), ckpt_every=2
+    )
+    list(loop.run(iter([1.0, 1.0, 1.0, 1.0]), steps=4))
+    assert latest_step(tmp_path) is not None
+    # relaunch resumes
+    loop2 = ResilientLoop(
+        step, jnp.zeros(()), ckpt_dir=str(tmp_path), ckpt_every=2
+    )
+    assert loop2.resumed and loop2.step >= 1
+    assert float(loop2.state) > 0
+
+
+def test_resilient_loop_retries_transient_failure(tmp_path):
+    calls = {"n": 0}
+
+    def flaky(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise RuntimeError("simulated preemption")
+        return state + 1, {}
+
+    loop = ResilientLoop(
+        flaky, jnp.zeros(()), ckpt_dir=str(tmp_path), ckpt_every=1, max_retries=2
+    )
+    list(loop.run(iter([0, 0, 0, 0]), steps=4))
+    assert calls["n"] >= 5  # one retry happened
+
+
+def test_heartbeat_staleness(tmp_path):
+    hb = Heartbeat(str(tmp_path), host_id=3)
+    hb.beat(10)
+    assert Heartbeat.stale_hosts(str(tmp_path), timeout_s=60) == []
+    data = json.loads(hb.path.read_text())
+    data["t"] -= 3600
+    hb.path.write_text(json.dumps(data))
+    assert Heartbeat.stale_hosts(str(tmp_path), timeout_s=60) == ["heartbeat_3"]
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_token_stream_deterministic_and_seekable():
+    cfg = TokenStreamConfig(vocab_size=100, seq_len=16, global_batch=4)
+    s1, s2 = TokenStream(cfg), TokenStream(cfg)
+    np.testing.assert_array_equal(s1.batch_at(7), s2.batch_at(7))
+    assert not np.array_equal(s1.batch_at(7), s1.batch_at(8))
+    assert s1.batch_at(0).shape == (4, 17)
+
+
+def test_token_stream_host_sharding():
+    cfg0 = TokenStreamConfig(100, 16, 8, n_hosts=2, host_id=0)
+    cfg1 = TokenStreamConfig(100, 16, 8, n_hosts=2, host_id=1)
+    b0, b1 = TokenStream(cfg0).batch_at(0), TokenStream(cfg1).batch_at(0)
+    assert b0.shape == (4, 17) and b1.shape == (4, 17)
+    assert not np.array_equal(b0, b1)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def _quad_params():
+    return {"w": jnp.asarray([3.0, -2.0, 1.0])}
+
+
+@pytest.mark.parametrize("name", ["adamw", "adamw8bit"])
+def test_optimizer_descends_quadratic(name):
+    opt = opt_mod.make_optimizer(name, lr=0.1)
+    params = _quad_params()
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for i in range(120):
+        g = jax.grad(loss)(params)
+        # cosine-decayed lr via the schedule helper (also exercises it)
+        scale = opt_mod.cosine_schedule(i, base=1.0, warmup=5, total=120)
+        upd, state = opt.update(g, state, params, lr_scale=scale)
+        params = opt_mod.apply_updates(params, upd)
+    assert float(loss(params)) < 5e-2
+
+
+def test_q8_quantization_error_bounded():
+    x = jax.random.normal(jax.random.key(0), (64, 256)) * 3.0
+    z = opt_mod._q8_encode(x)
+    back = opt_mod._q8_decode(z)
+    err = jnp.abs(back - x).max() / jnp.abs(x).max()
+    assert float(err) < 1.5 / 127  # per-row absmax quantisation bound
+    assert z.q.shape == x.shape and z.scale.shape == (64, 1)
+
+
+def test_cosine_schedule_shape():
+    mult0 = opt_mod.cosine_schedule(0, base=1.0, warmup=10, total=100)
+    mult10 = opt_mod.cosine_schedule(10, base=1.0, warmup=10, total=100)
+    mult100 = opt_mod.cosine_schedule(100, base=1.0, warmup=10, total=100)
+    assert float(mult0) == 0.0 and abs(float(mult10) - 1.0) < 1e-6
+    assert float(mult100) == pytest.approx(0.1, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+def test_partition_spec_divisibility_and_dedup():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.rules import make_rules, partition_spec
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # fake a 16-wide model axis via rules on a tiny mesh: use divisibility
+    rules = make_rules(mesh, fsdp=True)
+    # kv_heads=8 on model=1 -> divisible -> sharded entry named "model"
+    spec = partition_spec((8, 128), ("kv_heads", None), mesh, rules)
+    assert spec == P("model", None)
+    # duplicate mesh axis must be dropped on the second dim
+    spec2 = partition_spec((8, 8), ("heads", "kv_heads"), mesh, rules)
+    assert spec2 == P("model", None)
+
+
+def test_shard_noop_without_ctx():
+    from repro.sharding import shard
+
+    x = jnp.ones((4, 4))
+    assert shard(x, ("batch", None)) is x
+
+
+# ---------------------------------------------------------------------------
+# HLO roofline parser
+# ---------------------------------------------------------------------------
+
+def test_hlo_parser_loop_correction():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def f(x, ws):
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 128, 128), jnp.float32)
+    st = analyze(jax.jit(f).lower(x, ws).compile().as_text())
+    want = 5 * 2 * 128**3
+    assert st.dot_flops == pytest.approx(want, rel=1e-6)
+    assert 5 in st.while_trips.values()
+
+
+def test_hlo_parser_counts_collectives():
+    # single-device program: no collectives
+    f = lambda a, b: a @ b
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    st = analyze(jax.jit(f).lower(a, a).compile().as_text())
+    assert st.collective_bytes == 0.0
+    assert st.dot_flops == pytest.approx(2 * 64**3, rel=1e-6)
+    assert st.entry_param_bytes == 2 * 64 * 64 * 4
