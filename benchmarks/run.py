@@ -24,6 +24,7 @@ def main(argv=None):
         bench_accuracy,
         bench_features,
         bench_memory,
+        bench_service,
         bench_spmm,
         bench_verification,
     )
@@ -35,6 +36,7 @@ def main(argv=None):
         ("spmm kernels (Fig. 9)", bench_spmm.main),
         ("verification runtime (Fig. 10)", bench_verification.main),
         ("feature ablation (§III-B)", bench_features.main),
+        ("verification service (repro.service)", bench_service.main),
     ]
     failed = []
     for name, fn in suites:

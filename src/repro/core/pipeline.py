@@ -3,6 +3,17 @@
     netlist/AIG -> features -> [partition -> re-growth] -> GNN inference
     -> XOR/MAJ classification -> algebraic verification
 
+The flow is exposed both as the one-shot :func:`run_pipeline` and as the
+three reusable stages it composes —
+
+  :func:`prepare`          host-side: design gen/ingest, features,
+                           partitioning + boundary re-growth
+  :func:`infer`            device-side: (partitioned) GNN prediction
+  :func:`verify_prepared`  host-side: adder extraction + simulation check
+
+— so batch schedulers (``repro.service``) can interleave the host and
+device stages of many requests instead of running each end to end.
+
 Also provides the device-memory model used by the Fig. 8 / Table II
 benchmark: because this container is CPU-only, "GPU memory" is an
 *analytic but array-accurate* count of the device buffers each inference
@@ -77,12 +88,49 @@ def memory_model_bytes(
     return int(bytes_)
 
 
-def run_pipeline(
-    cfg: PipelineConfig, params, *, verify_result: bool = False
-) -> PipelineResult:
-    """Inference + verification with a trained model."""
+@dataclasses.dataclass
+class PreparedDesign:
+    """Host-side output of :func:`prepare` — everything inference needs."""
+
+    cfg: PipelineConfig
+    design: object               # AIG or LUTGraph
+    labels: np.ndarray
+    feats: np.ndarray
+    graph: EdgeGraph
+    subgraphs: Optional[list[Subgraph]]   # None when unpartitioned
+    boundary_edge_frac: float
+    timings: dict
+
+    @property
+    def num_nodes(self) -> int:
+        return self.graph.num_nodes
+
+    @property
+    def num_edges(self) -> int:
+        return self.graph.num_edges
+
+    def memory_bytes(self) -> tuple[int, int]:
+        """(unpartitioned, peak-over-partitions) device bytes."""
+        full = memory_model_bytes(self.num_nodes, self.num_edges, self.cfg.gnn)
+        if not self.subgraphs:
+            return full, full
+        peak = max(
+            memory_model_bytes(sg.num_nodes, sg.num_edges, self.cfg.gnn)
+            for sg in self.subgraphs
+        )
+        return full, peak
+
+
+def prepare(cfg: PipelineConfig, design=None) -> PreparedDesign:
+    """Stage 1 (host): design generation/ingest, features, partition+re-growth.
+
+    ``design`` overrides generation — the ingestion path for AIGs parsed
+    from AIGER files (``repro.io.aiger``); ``cfg.dataset``/``cfg.bits``
+    are then only used for verification metadata downstream.
+    """
     t0 = time.perf_counter()
-    design = A.make_design(cfg.dataset, cfg.bits, seed=cfg.seed)
+    if design is None:
+        design = A.make_design(cfg.dataset, cfg.bits, seed=cfg.seed)
     labels = design.label
     feats = groot_features(design)
     g1 = design.to_edge_graph()
@@ -94,49 +142,79 @@ def run_pipeline(
         g = g1
     t_gen = time.perf_counter() - t0
 
-    mem_full = memory_model_bytes(g.num_nodes, g.num_edges, cfg.gnn)
-
     t0 = time.perf_counter()
     if cfg.num_partitions <= 1:
-        pred = gnn.predict(params, g, feats, backend=cfg.aggregate)
-        peak_mem = mem_full
-        bfrac = 0.0
-        t_part = 0.0
-        t_inf = time.perf_counter() - t0
+        subs, bfrac, t_part = None, 0.0, 0.0
     else:
         part = PARTITIONERS[cfg.partitioner](g, cfg.num_partitions, seed=cfg.seed)
         bfrac = boundary_edge_fraction(g, part)
         subs = extract_partitions(g, part, regrow=cfg.regrow)
         t_part = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        pred = gnn.predict_partitioned(
-            params, subs, feats, g.num_nodes, backend=cfg.aggregate
-        )
-        t_inf = time.perf_counter() - t0
-        peak_mem = max(
-            memory_model_bytes(sg.num_nodes, sg.num_edges, cfg.gnn) for sg in subs
-        )
+    return PreparedDesign(
+        cfg=cfg,
+        design=design,
+        labels=labels,
+        feats=feats,
+        graph=g,
+        subgraphs=subs,
+        boundary_edge_frac=bfrac,
+        timings={"gen": t_gen, "partition": t_part},
+    )
 
-    acc = gnn.accuracy(pred, labels)
-    verdict = None
-    if verify_result and cfg.batch == 1 and isinstance(design, A.AIG):
-        verdict = verify(
-            design,
-            pred[: design.num_nodes],
-            bits=cfg.bits,
-            signed=(cfg.dataset == "booth"),
-            simulate=cfg.bits <= 64,
-        )
+
+def infer(params, prep: PreparedDesign, *, backend: Optional[str] = None) -> np.ndarray:
+    """Stage 2 (device): per-node class predictions over the full graph."""
+    backend = backend or prep.cfg.aggregate
+    if prep.subgraphs is None:
+        return gnn.predict(params, prep.graph, prep.feats, backend=backend)
+    return gnn.predict_partitioned(
+        params, prep.subgraphs, prep.feats, prep.num_nodes, backend=backend
+    )
+
+
+def verify_prepared(
+    prep: PreparedDesign, pred: np.ndarray, *, signed: Optional[bool] = None
+) -> Optional[VerifyResult]:
+    """Stage 3 (host): algebraic adder extraction + simulation cross-check.
+
+    Returns None when the prepared design is not verifiable as a single
+    multiplier AIG (batched runs, LUT graphs).
+    """
+    if prep.cfg.batch != 1 or not isinstance(prep.design, A.AIG):
+        return None
+    bits = prep.design.n_pi // 2
+    if signed is None:
+        signed = prep.cfg.dataset == "booth" or prep.design.name.startswith("booth")
+    return verify(
+        prep.design,
+        pred[: prep.design.num_nodes],
+        bits=bits,
+        signed=signed,
+        simulate=bits <= 64,
+    )
+
+
+def run_pipeline(
+    cfg: PipelineConfig, params, *, verify_result: bool = False
+) -> PipelineResult:
+    """Inference + verification with a trained model (composes the stages)."""
+    prep = prepare(cfg)
+    t0 = time.perf_counter()
+    pred = infer(params, prep)
+    t_inf = time.perf_counter() - t0
+    mem_full, peak_mem = prep.memory_bytes()
+    acc = gnn.accuracy(pred, prep.labels)
+    verdict = verify_prepared(prep, pred) if verify_result else None
     return PipelineResult(
         accuracy=acc,
         core_accuracy=acc,
         peak_memory_bytes=peak_mem,
         unpartitioned_memory_bytes=mem_full,
-        boundary_edge_frac=bfrac,
-        timings={"gen": t_gen, "partition": t_part, "inference": t_inf},
+        boundary_edge_frac=prep.boundary_edge_frac,
+        timings={**prep.timings, "inference": t_inf},
         verdict=verdict,
-        num_nodes=g.num_nodes,
-        num_edges=g.num_edges,
+        num_nodes=prep.num_nodes,
+        num_edges=prep.num_edges,
     )
 
 

@@ -1,0 +1,2 @@
+"""Ingestion/serialization boundary: standard circuit formats -> repro AIGs."""
+from repro.io.aiger import dump, dumps, load, loads, structural_hash  # noqa: F401

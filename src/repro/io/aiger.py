@@ -1,0 +1,325 @@
+"""AIGER reader/writer for :class:`repro.core.aig.AIG`.
+
+Implements both formats of the AIGER 1.9 combinational subset:
+
+  * ASCII  (``aag M I L O A``): explicit input/output/and lines, any
+    gate order (we topologically sort on read);
+  * binary (``aig M I L O A``): implicit inputs, delta-compressed
+    LEB128 gate encoding, gates guaranteed topologically ordered.
+
+Latches are not supported (the GROOT workload is combinational
+multipliers).  Both repro and AIGER use the ABC literal convention
+``lit = 2*var + inv``, so conversion is a variable renumbering:
+
+  AIGER var 1..I        <->  AIG PI nodes 0..I-1
+  AIGER var I+1..I+A    <->  AIG AND nodes, topological order
+  AIGER output literals <->  AIG PO nodes (appended after all ANDs)
+
+AIGER carries no node labels, but the GROOT flow needs the
+construction-time XOR/MAJ ground truth to score predictions.  We
+persist labels losslessly through the comment section (``c``) as a
+``groot-labels`` digit string (one char per node, reconstructed node
+order); files from other producers fall back to the classical
+structural detector (:func:`repro.core.labels.structural_detect`).
+
+:func:`structural_hash` — the service-layer dedup key — hashes the
+canonical comment-free binary encoding, so it is invariant to format,
+symbol tables, comments, and design names.
+"""
+from __future__ import annotations
+
+import hashlib
+import heapq
+import io
+from typing import Union
+
+import numpy as np
+
+from repro.core import aig as A
+
+__all__ = ["dump", "dumps", "load", "loads", "structural_hash", "AigerError"]
+
+
+class AigerError(ValueError):
+    """Malformed or unsupported AIGER input."""
+
+
+# ---------------------------------------------------------------------------
+# Writing
+# ---------------------------------------------------------------------------
+
+def _var_map(aig: A.AIG) -> tuple[np.ndarray, np.ndarray]:
+    """AIGER variable index per node (PIs 1..I, ANDs I+1.. in node order)."""
+    kind = aig.kind
+    if not (kind[: aig.n_pi] == A.PI).all() or int((kind == A.PI).sum()) != aig.n_pi:
+        raise AigerError("AIG does not keep its PIs in nodes [0, n_pi)")
+    and_nodes = np.where(kind == A.AND)[0]
+    var = np.zeros(aig.num_nodes, dtype=np.int64)
+    var[: aig.n_pi] = np.arange(1, aig.n_pi + 1)
+    var[and_nodes] = aig.n_pi + 1 + np.arange(len(and_nodes))
+    return var, and_nodes
+
+
+def _to_aiger_lit(var: np.ndarray, lit: int) -> int:
+    if lit < 0:
+        raise AigerError("constant literals are folded at build time; cannot export")
+    return 2 * int(var[lit >> 1]) + (lit & 1)
+
+
+def _label_string(aig: A.AIG, and_nodes: np.ndarray) -> str:
+    """Labels in *reconstructed* node order: PIs, ANDs, POs(pos order)."""
+    ordered = np.concatenate(
+        [aig.label[: aig.n_pi], aig.label[and_nodes], aig.label[aig.pos]]
+    )
+    return "".join(chr(ord("0") + int(v)) for v in ordered)
+
+
+def _encode_leb(delta: int, out: bytearray) -> None:
+    while delta >= 0x80:
+        out.append((delta & 0x7F) | 0x80)
+        delta >>= 7
+    out.append(delta)
+
+
+def dumps(aig: A.AIG, *, binary: bool = True, comments: bool = True) -> bytes:
+    """Serialize an AIG to AIGER bytes (binary ``aig`` or ASCII ``aag``)."""
+    var, and_nodes = _var_map(aig)
+    n_and = len(and_nodes)
+    m = aig.n_pi + n_and
+    outputs = [_to_aiger_lit(var, int(aig.fanin0[p])) for p in aig.pos]
+
+    buf = bytearray()
+    magic = b"aig" if binary else b"aag"
+    buf += b"%s %d %d 0 %d %d\n" % (magic, m, aig.n_pi, len(outputs), n_and)
+    if not binary:
+        for i in range(aig.n_pi):
+            buf += b"%d\n" % (2 * (i + 1))
+    for o in outputs:
+        buf += b"%d\n" % o
+    if binary:
+        for k, node in enumerate(and_nodes):
+            lhs = 2 * (aig.n_pi + 1 + k)
+            r0 = _to_aiger_lit(var, int(aig.fanin0[node]))
+            r1 = _to_aiger_lit(var, int(aig.fanin1[node]))
+            rhs0, rhs1 = max(r0, r1), min(r0, r1)
+            if rhs0 >= lhs:
+                raise AigerError("AND fanins are not topologically ordered")
+            _encode_leb(lhs - rhs0, buf)
+            _encode_leb(rhs0 - rhs1, buf)
+    else:
+        for k, node in enumerate(and_nodes):
+            lhs = 2 * (aig.n_pi + 1 + k)
+            r0 = _to_aiger_lit(var, int(aig.fanin0[node]))
+            r1 = _to_aiger_lit(var, int(aig.fanin1[node]))
+            # same ordering requirement as the binary format: the reader's
+            # smallest-var-first topo sort then reproduces this gate order,
+            # which the groot-labels comment relies on
+            if max(r0, r1) >= lhs:
+                raise AigerError("AND fanins are not topologically ordered")
+            buf += b"%d %d %d\n" % (lhs, max(r0, r1), min(r0, r1))
+    if comments:
+        buf += b"c\n"
+        buf += b"groot-name %s\n" % aig.name.encode()
+        buf += b"groot-labels %s\n" % _label_string(aig, and_nodes).encode()
+    return bytes(buf)
+
+
+def dump(aig: A.AIG, path, *, binary: bool = True, comments: bool = True) -> None:
+    with open(path, "wb") as f:
+        f.write(dumps(aig, binary=binary, comments=comments))
+
+
+# ---------------------------------------------------------------------------
+# Reading
+# ---------------------------------------------------------------------------
+
+def _read_line(f: io.BytesIO) -> bytes:
+    line = f.readline()
+    if not line:
+        raise AigerError("unexpected end of AIGER data")
+    return line.rstrip(b"\n")
+
+
+def _decode_leb(f: io.BytesIO) -> int:
+    value, shift = 0, 0
+    while True:
+        byte = f.read(1)
+        if not byte:
+            raise AigerError("truncated binary AND section")
+        b = byte[0]
+        value |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return value
+        shift += 7
+
+
+def _topo_sort_ands(defs: dict[int, tuple[int, int]], n_in: int) -> list[int]:
+    """Kahn's algorithm over AND variable definitions (ASCII files may list
+    gates in any order).  Smallest ready variable first: a file whose
+    variables are already topologically increasing (every writer we know
+    of, including ours) round-trips with its gate order intact."""
+    indeg = {v: 0 for v in defs}
+    users: dict[int, list[int]] = {v: [] for v in defs}
+    for v, (r0, r1) in defs.items():
+        for r in (r0 >> 1, r1 >> 1):
+            if r in defs:
+                indeg[v] += 1
+                users[r].append(v)
+            elif r > n_in and r not in defs:
+                raise AigerError(f"undefined AND variable {r}")
+    ready = [v for v, d in indeg.items() if d == 0]
+    heapq.heapify(ready)
+    order: list[int] = []
+    while ready:
+        v = heapq.heappop(ready)
+        order.append(v)
+        for u in users[v]:
+            indeg[u] -= 1
+            if indeg[u] == 0:
+                heapq.heappush(ready, u)
+    if len(order) != len(defs):
+        raise AigerError("cyclic AND definitions")
+    return order
+
+
+def _parse_trailer(f: io.BytesIO) -> dict[str, str]:
+    """Symbol table + comment section -> {name, labels} when present."""
+    meta: dict[str, str] = {}
+    in_comments = False
+    for raw in f.read().split(b"\n"):
+        line = raw.decode("utf-8", errors="replace")
+        if not in_comments:
+            if line == "c":
+                in_comments = True
+            continue
+        if line.startswith("groot-name "):
+            meta["name"] = line[len("groot-name "):]
+        elif line.startswith("groot-labels "):
+            meta["labels"] = line[len("groot-labels "):]
+    return meta
+
+
+def loads(data: bytes, *, name: str = "aiger") -> A.AIG:
+    """Parse AIGER bytes (either format) into an :class:`AIG`."""
+    f = io.BytesIO(data)
+    header = _read_line(f).split()
+    if len(header) < 6 or header[0] not in (b"aig", b"aag"):
+        raise AigerError("not an AIGER file (want 'aig'/'aag M I L O A' header)")
+    binary = header[0] == b"aig"
+    try:
+        m, n_in, n_latch, n_out, n_and = (int(x) for x in header[1:6])
+    except ValueError as e:
+        raise AigerError(f"bad header {header!r}") from e
+    if n_latch:
+        raise AigerError("latches are not supported (combinational AIGs only)")
+    if m != n_in + n_and:
+        raise AigerError(f"header M={m} != I+A={n_in + n_and}")
+
+    if binary:
+        out_lits = [int(_read_line(f)) for _ in range(n_out)]
+        and_order = list(range(n_in + 1, n_in + n_and + 1))
+        defs: dict[int, tuple[int, int]] = {}
+        for i, v in enumerate(and_order):
+            lhs = 2 * v
+            d0 = _decode_leb(f)
+            d1 = _decode_leb(f)
+            rhs0 = lhs - d0
+            rhs1 = rhs0 - d1
+            if rhs1 < 0 or rhs0 >= lhs:
+                raise AigerError(f"bad delta encoding for AND {v}")
+            defs[v] = (rhs0, rhs1)
+    else:
+        in_lits = [int(_read_line(f)) for _ in range(n_in)]
+        for i, lit in enumerate(in_lits):
+            if lit != 2 * (i + 1):
+                raise AigerError("non-contiguous ASCII input literals unsupported")
+        out_lits = [int(_read_line(f)) for _ in range(n_out)]
+        defs = {}
+        for _ in range(n_and):
+            lhs, r0, r1 = (int(x) for x in _read_line(f).split())
+            if lhs & 1 or not (n_in + 1 <= lhs >> 1 <= m):
+                raise AigerError(f"bad AND lhs literal {lhs}")
+            defs[lhs >> 1] = (r0, r1)
+        if len(defs) != n_and:
+            raise AigerError("duplicate AND definitions")
+        and_order = _topo_sort_ands(defs, n_in)
+    meta = _parse_trailer(f)
+
+    # Node layout: PIs, ANDs (topological), then POs.
+    num_nodes = n_in + n_and + n_out
+    node_of_var = np.full(m + 1, -1, dtype=np.int64)
+    node_of_var[1 : n_in + 1] = np.arange(n_in)
+    for k, v in enumerate(and_order):
+        node_of_var[v] = n_in + k
+
+    def conv(lit: int) -> int:
+        if lit < 2:
+            raise AigerError("constant literals unsupported (fold them upstream)")
+        if lit >> 1 > m:
+            raise AigerError(f"literal {lit} exceeds max variable index {m}")
+        node = int(node_of_var[lit >> 1])
+        if node < 0:
+            raise AigerError(f"literal {lit} references an undefined variable")
+        return 2 * node + (lit & 1)
+
+    kind = np.empty(num_nodes, dtype=np.int8)
+    fanin0 = np.full(num_nodes, -3, dtype=np.int64)
+    fanin1 = np.full(num_nodes, -3, dtype=np.int64)
+    kind[:n_in] = A.PI
+    for k, v in enumerate(and_order):
+        l0, l1 = (conv(x) for x in defs[v])
+        node = n_in + k
+        kind[node] = A.AND
+        fanin0[node], fanin1[node] = min(l0, l1), max(l0, l1)
+    pos = np.arange(n_in + n_and, num_nodes, dtype=np.int64)
+    kind[pos] = A.PO
+    fanin0[pos] = [conv(o) for o in out_lits]
+
+    label = meta.get("labels", "")
+    if len(label) == num_nodes:
+        labels = np.frombuffer(label.encode(), dtype=np.uint8).astype(np.int8)
+        labels -= ord("0")
+        if labels.min() < 0 or labels.max() >= A.NUM_CLASSES:
+            raise AigerError("corrupt groot-labels comment")
+    else:
+        from repro.core.labels import structural_detect
+
+        labels = None  # needs the AIG below
+
+    aig = A.AIG(
+        name=meta.get("name", name),
+        kind=kind,
+        fanin0=fanin0,
+        fanin1=fanin1,
+        label=labels if labels is not None else np.zeros(num_nodes, np.int8),
+        n_pi=n_in,
+        pos=pos,
+    )
+    if labels is None:
+        aig.label = structural_detect(aig)
+    return aig
+
+
+def load(path) -> A.AIG:
+    with open(path, "rb") as f:
+        data = f.read()
+    import os
+
+    return loads(data, name=os.path.splitext(os.path.basename(str(path)))[0])
+
+
+# ---------------------------------------------------------------------------
+# Structural hashing (service-layer dedup key)
+# ---------------------------------------------------------------------------
+
+def structural_hash(design: Union[A.AIG, bytes]) -> str:
+    """Canonical content hash of a design.
+
+    AIGs hash their comment-free binary AIGER encoding, so the same
+    structure produces the same key regardless of name, labels, or the
+    on-disk format it arrived in.  Raw AIGER bytes are normalised by a
+    parse -> re-encode round trip.
+    """
+    if isinstance(design, (bytes, bytearray)):
+        design = loads(bytes(design))
+    return hashlib.sha256(dumps(design, binary=True, comments=False)).hexdigest()

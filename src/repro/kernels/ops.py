@@ -157,6 +157,71 @@ def _apply_plan_fused(plan: SpmmPlan, x, w, w_mat, *, interpret: bool):
     return out[:, :h]
 
 
+# ---------------------------------------------------------------------------
+# Padded-shape entry points (the service scheduler's bucketing contract).
+#
+# jit specialises on array shapes: serving many differently-sized graphs
+# through the same compiled GNN requires padding every graph to a small
+# set of canonical (nodes, edges) shapes.  The contract that keeps padded
+# inference *exact* for real rows:
+#
+#   * padded feature rows are zero and are never aggregated into real rows;
+#   * padded edges are self-loops on a dummy node (>= num_real), so every
+#     aggregation/degree a real node sees is identical to the unpadded run.
+# ---------------------------------------------------------------------------
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (1 for n <= 1)."""
+    return 1 if n <= 1 else 1 << int(n - 1).bit_length()
+
+
+def padded_shape(
+    num_nodes: int, num_edges: int, *, min_nodes: int = 16, min_edges: int = 16
+) -> tuple[int, int]:
+    """Power-of-two (nodes, edges) padding target.
+
+    Nodes round up from ``num_nodes + 1``: at least one spare row is
+    guaranteed, which is where padding edges park their endpoints.
+    """
+    n_pad = next_pow2(max(num_nodes + 1, min_nodes))
+    e_pad = next_pow2(max(num_edges, min_edges, 1))
+    return n_pad, e_pad
+
+
+def pad_graph_arrays(
+    edge_src,
+    edge_dst,
+    edge_inv,
+    edge_slot,
+    num_nodes: int,
+    n_pad: int,
+    e_pad: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Pad COO edge arrays to length ``e_pad`` for a ``n_pad``-row graph.
+
+    Padding edges are self-loops on the dummy row ``n_pad - 1``; missing
+    inv/slot annotations come back as zeros (dense arrays keep the jit
+    signature uniform across designs that do / don't carry them).
+    """
+    e = len(edge_src)
+    if n_pad <= num_nodes or e_pad < e:
+        raise ValueError(
+            f"padded shape ({n_pad}, {e_pad}) cannot hold graph "
+            f"({num_nodes} nodes, {e} edges)"
+        )
+    dummy = n_pad - 1
+    pad = e_pad - e
+    src = np.concatenate([edge_src, np.full(pad, dummy)]).astype(np.int32)
+    dst = np.concatenate([edge_dst, np.full(pad, dummy)]).astype(np.int32)
+    inv = np.zeros(e_pad, dtype=bool)
+    if edge_inv is not None:
+        inv[:e] = edge_inv
+    slot = np.zeros(e_pad, dtype=np.uint8)
+    if edge_slot is not None:
+        slot[:e] = edge_slot
+    return src, dst, inv, slot
+
+
 def make_agg_pair(edge_src, edge_dst, num_nodes: int, backend: str = "ref") -> AggPair:
     """Build the aggregation pair for a graph under the given backend."""
     if backend == "ref":

@@ -1,0 +1,28 @@
+"""Verification-as-a-service: request-oriented layer over the GROOT flow.
+
+    repro.io.aiger  ->  VerificationService.submit()/poll()
+                          |-- ResultCache (structural-hash dedup)
+                          |-- prepare pool (host: partition + re-growth)
+                          |-- ShapeBucketScheduler (device: padded buckets)
+                          `-- verify (host: adders + simulation check)
+
+``python -m repro.service.server`` runs the CLI front end.
+"""
+from repro.service.cache import CacheStats, ResultCache  # noqa: F401
+from repro.service.bucketing import BucketShape, WorkItem, pack_batch  # noqa: F401
+from repro.service.scheduler import BucketRunner, ShapeBucketScheduler  # noqa: F401
+
+_SERVER_EXPORTS = ("ServiceConfig", "ServiceResult", "VerificationService")
+__all__ = [
+    "CacheStats", "ResultCache", "BucketShape", "WorkItem", "pack_batch",
+    "BucketRunner", "ShapeBucketScheduler", *_SERVER_EXPORTS,
+]
+
+
+def __getattr__(name):
+    # Lazy so `python -m repro.service.server` doesn't double-import server.
+    if name in _SERVER_EXPORTS:
+        from repro.service import server
+
+        return getattr(server, name)
+    raise AttributeError(name)

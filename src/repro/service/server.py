@@ -1,0 +1,429 @@
+"""`VerificationService`: submit/poll API + CLI entry point.
+
+    svc = VerificationService(params, num_partitions=4)
+    ticket = svc.submit_aiger("design.aig")        # or submit_design(...)
+    result = svc.result(ticket)                    # blocking; poll() doesn't
+
+Three overlapping execution stages, mirroring a production inference
+server:
+
+  * a *prepare pool* (threads) runs the host-side work per request —
+    AIGER parsing, structural hashing + cache lookup, feature
+    extraction, partitioning, boundary re-growth;
+  * a single *device worker* drains prepared requests, batches their
+    partitions through the :class:`ShapeBucketScheduler` (padded pow-2
+    buckets -> stable jit shapes), and hands finished predictions back;
+  * verification (adder extraction + simulation cross-check) runs back
+    on the pool, so the device never waits on host post-processing.
+
+Cache hits skip partitioning, inference, and verification entirely.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.service.server \
+        --designs csa:8,csa:16,booth:8 --partitions 4 --repeat 2
+    PYTHONPATH=src python -m repro.service.server --aiger design.aig
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+from repro.core import aig as A
+from repro.core import gnn
+from repro.core import pipeline as P
+from repro.core.verify import VerifyResult
+from repro.io import aiger
+from repro.service.bucketing import items_from_prepared
+from repro.service.cache import ResultCache
+from repro.service.scheduler import ShapeBucketScheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    num_partitions: int = 1
+    regrow: bool = True
+    partitioner: str = "multilevel"
+    backend: str = "ref"          # shape-stable backends only (see scheduler)
+    capacity: int = 2             # same-bucket items packed per device call
+    min_nodes: int = 64           # bucket floor (nodes)
+    min_edges: int = 128          # bucket floor (edges)
+    prepare_workers: int = 2
+    cache_capacity: int = 1024
+    max_batch_requests: int = 16  # requests drained per device-worker cycle
+    max_done_retained: int = 4096  # finished tickets kept pollable (FIFO evict)
+
+    def cache_key_part(self) -> tuple:
+        return (
+            self.num_partitions, self.regrow, self.partitioner, self.backend,
+        )
+
+
+@dataclasses.dataclass
+class ServiceResult:
+    req_id: int
+    name: str
+    status: str                   # verified|falsified|inconclusive|classified|error
+    accuracy: float
+    core_accuracy: float
+    verdict: Optional[VerifyResult]
+    cached: bool
+    num_nodes: int
+    num_edges: int
+    timings: dict
+    error: Optional[str] = None
+
+
+@dataclasses.dataclass
+class _Request:
+    req_id: int
+    design: object                       # AIG/LUTGraph or None (generate/parse)
+    aiger_bytes: Optional[bytes]
+    dataset: str
+    bits: int
+    seed: int
+    verify: bool
+    signed: Optional[bool]
+    t_submit: float
+    event: threading.Event = dataclasses.field(default_factory=threading.Event)
+    result: Optional[ServiceResult] = None
+
+
+class VerificationService:
+    """Batched, cached verification over a trained GROOT model."""
+
+    def __init__(self, params, config: Optional[ServiceConfig] = None, **overrides):
+        if config is None:
+            config = ServiceConfig(**overrides)
+        elif overrides:
+            config = dataclasses.replace(config, **overrides)
+        self.config = config
+        self.cache = ResultCache(config.cache_capacity)
+        self.scheduler = ShapeBucketScheduler(
+            params,
+            backend=config.backend,
+            capacity=config.capacity,
+            min_nodes=config.min_nodes,
+            min_edges=config.min_edges,
+        )
+        self._pool = ThreadPoolExecutor(
+            max_workers=config.prepare_workers, thread_name_prefix="svc-prepare"
+        )
+        self._device_q: queue.Queue = queue.Queue()
+        self._requests: dict[int, _Request] = {}
+        self._done_order: deque[int] = deque()
+        self._lock = threading.Lock()
+        self._next_id = 0
+        self._stop = False
+        self._device_thread = threading.Thread(
+            target=self._device_loop, name="svc-device", daemon=True
+        )
+        self._device_thread.start()
+
+    # -- submission API ------------------------------------------------------
+
+    def submit(
+        self,
+        design=None,
+        *,
+        dataset: str = "csa",
+        bits: int = 8,
+        seed: int = 0,
+        aiger_bytes: Optional[bytes] = None,
+        verify: bool = True,
+        signed: Optional[bool] = None,
+    ) -> int:
+        """Enqueue one verification request; returns a ticket id."""
+        if self._stop:
+            raise RuntimeError("service is closed")
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+            req = _Request(
+                req_id=rid,
+                design=design,
+                aiger_bytes=aiger_bytes,
+                dataset=dataset,
+                bits=bits,
+                seed=seed,
+                verify=verify,
+                signed=signed,
+                t_submit=time.perf_counter(),
+            )
+            self._requests[rid] = req
+        self._pool.submit(self._prepare_one, req)
+        return rid
+
+    def submit_design(self, dataset: str, bits: int, *, seed: int = 0,
+                      verify: bool = True) -> int:
+        return self.submit(dataset=dataset, bits=bits, seed=seed, verify=verify)
+
+    def submit_aiger(self, source, *, verify: bool = True,
+                     signed: Optional[bool] = None) -> int:
+        """Submit an AIGER file (path) or raw AIGER bytes."""
+        if isinstance(source, (bytes, bytearray)):
+            data = bytes(source)
+        else:
+            with open(source, "rb") as f:
+                data = f.read()
+        return self.submit(aiger_bytes=data, verify=verify, signed=signed)
+
+    # -- retrieval API -------------------------------------------------------
+
+    def poll(self, ticket: int) -> Optional[ServiceResult]:
+        """Non-blocking: the result if finished, else None."""
+        req = self._requests.get(ticket)
+        if req is None:
+            raise KeyError(f"unknown ticket {ticket}")
+        return req.result if req.event.is_set() else None
+
+    def result(self, ticket: int, timeout: Optional[float] = None) -> ServiceResult:
+        """Blocking retrieval."""
+        req = self._requests.get(ticket)
+        if req is None:
+            raise KeyError(f"unknown ticket {ticket}")
+        if not req.event.wait(timeout):
+            raise TimeoutError(f"ticket {ticket} not done within {timeout}s")
+        assert req.result is not None
+        return req.result
+
+    def close(self, timeout: Optional[float] = 300.0) -> None:
+        """Drain outstanding requests and stop the workers."""
+        with self._lock:
+            pending = list(self._requests.values())
+        for req in pending:
+            req.event.wait(timeout)
+        self._stop = True
+        self._pool.shutdown(wait=True)
+        self._device_thread.join(timeout=10.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def stats(self) -> dict:
+        s = self.scheduler.stats()
+        return {
+            "cache": self.cache.stats,
+            "compile_count": s.compile_count,
+            "device_calls": s.run_count,
+            "buckets": [(b.n_pad, b.e_pad) for b in s.buckets],
+            "items_run": s.items_run,
+        }
+
+    # -- workers -------------------------------------------------------------
+
+    def _finish(self, req: _Request, result: ServiceResult) -> None:
+        req.result = result
+        req.event.set()
+        # bound the ticket table: a long-lived service must not retain one
+        # _Request (+ result payload) per request forever.  Oldest finished
+        # tickets stop being pollable past max_done_retained.
+        with self._lock:
+            self._done_order.append(req.req_id)
+            while len(self._done_order) > self.config.max_done_retained:
+                self._requests.pop(self._done_order.popleft(), None)
+
+    def _fail(self, req: _Request, exc: Exception) -> None:
+        self._finish(
+            req,
+            ServiceResult(
+                req_id=req.req_id, name="?", status="error", accuracy=0.0,
+                core_accuracy=0.0, verdict=None, cached=False, num_nodes=0,
+                num_edges=0, timings={}, error=f"{type(exc).__name__}: {exc}",
+            ),
+        )
+
+    def _prepare_one(self, req: _Request) -> None:
+        try:
+            t0 = time.perf_counter()
+            design = req.design
+            if design is None and req.aiger_bytes is not None:
+                design = aiger.loads(req.aiger_bytes)
+            cfg = P.PipelineConfig(
+                dataset=req.dataset,
+                bits=req.bits,
+                num_partitions=self.config.num_partitions,
+                regrow=self.config.regrow,
+                partitioner=self.config.partitioner,
+                aggregate=self.config.backend,
+                seed=req.seed,
+            )
+            key = None
+            if design is None or isinstance(design, A.AIG):
+                h = (
+                    aiger.structural_hash(design)
+                    if design is not None
+                    else f"gen:{req.dataset}:{req.bits}:{req.seed}"
+                )
+                # every request field that can change the outcome must be in
+                # the key: seed steers the partitioner, signed the spec check
+                key = ResultCache.key(
+                    h,
+                    self.config.cache_key_part()
+                    + (req.verify, req.signed, req.seed),
+                )
+                hit = self.cache.get(key)
+                if hit is not None:
+                    assert isinstance(hit, ServiceResult)
+                    self._finish(
+                        req,
+                        dataclasses.replace(
+                            hit,
+                            req_id=req.req_id,
+                            cached=True,
+                            timings={
+                                "prepare": time.perf_counter() - t0,
+                                "total": time.perf_counter() - req.t_submit,
+                            },
+                        ),
+                    )
+                    return
+            prep = P.prepare(cfg, design)
+            items = items_from_prepared(req.req_id, prep)
+            t_prep = time.perf_counter() - t0
+            self._device_q.put((req, key, prep, items, t_prep))
+        except Exception as e:  # noqa: BLE001 — request-scoped failure
+            self._fail(req, e)
+
+    def _device_loop(self) -> None:
+        while True:
+            try:
+                entry = self._device_q.get(timeout=0.05)
+            except queue.Empty:
+                if self._stop:
+                    return
+                continue
+            batch = [entry]
+            while len(batch) < self.config.max_batch_requests:
+                try:
+                    batch.append(self._device_q.get_nowait())
+                except queue.Empty:
+                    break
+            try:
+                t0 = time.perf_counter()
+                all_items = [it for (_, _, _, items, _) in batch for it in items]
+                preds = self.scheduler.run_items(all_items)
+                t_inf = time.perf_counter() - t0
+            except Exception as e:  # noqa: BLE001
+                for req, *_ in batch:
+                    self._fail(req, e)
+                continue
+            for req, key, prep, items, t_prep in batch:
+                out = np.zeros(prep.num_nodes, dtype=np.int64)
+                for it in items:
+                    p = preds[(req.req_id, it.part_index)]
+                    out[it.global_ids[: it.num_core]] = p[: it.num_core]
+                timings = {"prepare": t_prep, "inference": t_inf}
+                # host post-processing goes back to the pool: the device
+                # worker moves on to the next batch immediately
+                self._pool.submit(self._finalize, req, key, prep, out, timings)
+
+    def _finalize(self, req, key, prep, pred: np.ndarray, timings: dict) -> None:
+        try:
+            t0 = time.perf_counter()
+            acc = gnn.accuracy(pred, prep.labels)
+            verdict = None
+            if req.verify:
+                verdict = P.verify_prepared(prep, pred, signed=req.signed)
+            timings["verify"] = time.perf_counter() - t0
+            timings["total"] = time.perf_counter() - req.t_submit
+            result = ServiceResult(
+                req_id=req.req_id,
+                name=getattr(prep.design, "name", "?"),
+                status=verdict.status if verdict is not None else "classified",
+                accuracy=acc,
+                core_accuracy=acc,
+                verdict=verdict,
+                cached=False,
+                num_nodes=prep.num_nodes,
+                num_edges=prep.num_edges,
+                timings=timings,
+            )
+            if key is not None:
+                self.cache.put(key, result)
+            self._finish(req, result)
+        except Exception as e:  # noqa: BLE001
+            self._fail(req, e)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _parse_designs(spec: str) -> list[tuple[str, int]]:
+    out = []
+    for part in spec.split(","):
+        if not part:
+            continue
+        fam, _, bits = part.partition(":")
+        out.append((fam, int(bits or 8)))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="GROOT verification service")
+    ap.add_argument("--designs", default="csa:8,csa:16,booth:8",
+                    help="comma list of family:bits to generate and submit")
+    ap.add_argument("--aiger", nargs="*", default=[],
+                    help="AIGER files (.aig/.aag) to submit")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="submit the workload this many times (cache demo)")
+    ap.add_argument("--partitions", type=int, default=1)
+    ap.add_argument("--no-regrow", action="store_true")
+    ap.add_argument("--capacity", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--train-bits", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=300)
+    args = ap.parse_args(argv)
+
+    print(f"training groot-gnn on csa {args.train_bits}b ({args.epochs} epochs)...")
+    params, _ = P.train_model("csa", args.train_bits, epochs=args.epochs)
+
+    svc = VerificationService(
+        params,
+        num_partitions=args.partitions,
+        regrow=not args.no_regrow,
+        capacity=args.capacity,
+        prepare_workers=args.workers,
+    )
+    t0 = time.perf_counter()
+    results = []
+    with svc:
+        # rounds are sequential so repeat > 1 demonstrates cache hits
+        for _ in range(args.repeat):
+            tickets = [
+                svc.submit_design(fam, bits)
+                for fam, bits in _parse_designs(args.designs)
+            ]
+            tickets += [svc.submit_aiger(path) for path in args.aiger]
+            results += [svc.result(t) for t in tickets]
+    dt = time.perf_counter() - t0
+    print(f"\n{'ticket':>6} {'design':>18} {'status':>13} {'acc':>7} "
+          f"{'nodes':>7} {'cached':>6} {'total_s':>8}")
+    for r in results:
+        print(f"{r.req_id:>6} {r.name:>18} {r.status:>13} {r.accuracy:7.4f} "
+              f"{r.num_nodes:>7} {str(r.cached):>6} {r.timings.get('total', 0):8.3f}")
+        if r.error:
+            print(f"       error: {r.error}")
+    s = svc.stats()
+    print(f"\nserved {len(results)} requests in {dt:.2f}s "
+          f"({len(results) / dt:.1f} req/s incl. compile)")
+    print(f"jit compiles: {s['compile_count']}  device calls: {s['device_calls']}  "
+          f"buckets: {s['buckets']}")
+    print(f"cache: {s['cache'].hits} hits / {s['cache'].misses} misses "
+          f"(rate {s['cache'].hit_rate:.0%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Verification service: correctness vs the one-shot pipeline, shape
+bucketing (bounded jit compiles), and cache semantics.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import aig as A
+from repro.core import pipeline as P
+from repro.io import aiger
+from repro.service import VerificationService
+from repro.service.bucketing import BucketShape, WorkItem, pack_batch, unpack_predictions
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def trained_params():
+    params, _ = P.train_model("csa", 8, epochs=200)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Bucketing / padding units (no model needed)
+# ---------------------------------------------------------------------------
+
+def test_padded_shape_pow2_with_spare_row():
+    n_pad, e_pad = ops.padded_shape(100, 300, min_nodes=16, min_edges=16)
+    assert n_pad == 128 and e_pad == 512
+    # exact pow-2 node count still gets a spare dummy row
+    n_pad, _ = ops.padded_shape(128, 1)
+    assert n_pad == 256
+    assert ops.padded_shape(3, 0) == (16, 16)
+
+
+def test_pad_graph_arrays_contract():
+    src = np.array([0, 1], np.int32)
+    dst = np.array([2, 2], np.int32)
+    s, d, inv, slot = ops.pad_graph_arrays(src, dst, None, None, 3, 8, 4)
+    assert s.tolist() == [0, 1, 7, 7] and d.tolist() == [2, 2, 7, 7]
+    assert not inv.any() and not slot.any()
+    with pytest.raises(ValueError):
+        ops.pad_graph_arrays(src, dst, None, None, 3, 2, 4)  # n_pad too small
+
+
+def _item(rid, n, e, seed=0):
+    rng = np.random.default_rng(seed)
+    return WorkItem(
+        req_id=rid,
+        part_index=0,
+        feats=rng.standard_normal((n, 4)).astype(np.float32),
+        edge_src=rng.integers(0, n, e).astype(np.int32),
+        edge_dst=rng.integers(0, n, e).astype(np.int32),
+        edge_inv=None,
+        edge_slot=None,
+        num_core=n,
+        global_ids=np.arange(n, dtype=np.int64),
+    )
+
+
+def test_pack_batch_slots_are_disjoint():
+    items = [_item(0, 10, 20), _item(1, 14, 30, seed=1)]
+    shape = BucketShape(16, 32)
+    batch = pack_batch(items, shape, capacity=4)
+    assert batch["x"].shape == (64, 4)
+    assert batch["edge_src"].shape == (128,)
+    # slot i's edges stay inside slot i's node range
+    for i in range(4):
+        sl = slice(i * 32, (i + 1) * 32)
+        assert (batch["edge_src"][sl] >= i * 16).all()
+        assert (batch["edge_dst"][sl] < (i + 1) * 16).all()
+    outs = unpack_predictions(np.arange(64), items, shape)
+    assert outs[0].tolist() == list(range(10))
+    assert outs[1].tolist() == list(range(16, 30))
+
+
+# ---------------------------------------------------------------------------
+# Service vs one-shot pipeline (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_partitions", [1, 4])
+def test_service_matches_pipeline(trained_params, num_partitions):
+    cfg = P.PipelineConfig(dataset="csa", bits=12, num_partitions=num_partitions)
+    base = P.run_pipeline(cfg, trained_params, verify_result=True)
+    with VerificationService(trained_params, num_partitions=num_partitions) as svc:
+        r = svc.result(svc.submit_design("csa", 12), timeout=300)
+    assert base.verdict is not None
+    assert r.status == base.verdict.status
+    assert r.core_accuracy == pytest.approx(base.core_accuracy, abs=1e-12)
+    assert r.accuracy == pytest.approx(base.accuracy, abs=1e-12)
+    assert r.num_nodes == base.num_nodes
+
+
+def test_service_aiger_submission_matches_generated(trained_params, tmp_path):
+    aig = A.csa_multiplier(10)
+    path = tmp_path / "csa10.aig"
+    aiger.dump(aig, path)
+    with VerificationService(trained_params, num_partitions=2) as svc:
+        r_gen = svc.result(svc.submit_design("csa", 10), timeout=300)
+        r_aig = svc.result(svc.submit_aiger(path), timeout=300)
+    assert r_aig.status == r_gen.status
+    assert r_aig.accuracy == pytest.approx(r_gen.accuracy, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Bucketing efficacy + cache semantics (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_same_family_workload_compiles_at_most_num_buckets(trained_params):
+    widths = [6, 8, 10, 12]
+    with VerificationService(trained_params) as svc:
+        tickets = [svc.submit_design("csa", b) for b in widths]
+        for t in tickets:
+            assert svc.result(t, timeout=300).status != "error"
+        stats = svc.scheduler.stats()
+        assert stats.compile_count <= len(stats.buckets)
+        assert stats.compile_count < len(widths) or len(stats.buckets) == len(widths)
+        # resubmitting the whole workload adds zero compilations
+        before = svc.scheduler.stats().compile_count
+        tickets = [svc.submit_design("csa", b, seed=1) for b in widths]
+        for t in tickets:
+            svc.result(t, timeout=300)
+        assert svc.scheduler.stats().compile_count == before
+
+
+def test_cache_hit_skips_inference(trained_params):
+    with VerificationService(trained_params) as svc:
+        r1 = svc.result(svc.submit_design("csa", 8), timeout=300)
+        assert not r1.cached
+        runs = svc.scheduler.stats().run_count
+        r2 = svc.result(svc.submit_design("csa", 8), timeout=300)
+        assert r2.cached
+        assert r2.status == r1.status and r2.accuracy == r1.accuracy
+        assert svc.scheduler.stats().run_count == runs
+        assert svc.cache.stats.hits == 1
+
+
+def test_identical_aiger_files_dedup_via_structural_hash(trained_params):
+    data = aiger.dumps(A.csa_multiplier(8))
+    with VerificationService(trained_params) as svc:
+        r1 = svc.result(svc.submit_aiger(data), timeout=300)
+        r2 = svc.result(svc.submit_aiger(data), timeout=300)
+    assert not r1.cached and r2.cached
+
+
+def test_error_requests_are_isolated(trained_params):
+    with VerificationService(trained_params) as svc:
+        bad = svc.submit_aiger(b"garbage\n")
+        good = svc.submit_design("csa", 6)
+        r_bad = svc.result(bad, timeout=300)
+        r_good = svc.result(good, timeout=300)
+    assert r_bad.status == "error" and r_bad.error
+    assert r_good.status != "error"
+
+
+def test_poll_is_nonblocking_and_unknown_ticket_raises(trained_params):
+    with VerificationService(trained_params) as svc:
+        t = svc.submit_design("csa", 6)
+        svc.poll(t)  # may be None or a result; must not raise
+        r = svc.result(t, timeout=300)
+        assert svc.poll(t) is r
+        with pytest.raises(KeyError):
+            svc.poll(10_000)
