@@ -1,0 +1,107 @@
+"""Grouped multi-polarity SpMM vs per-group aggregation (PR 2 tentpole).
+
+Measures, per SAGE layer, what the grouped path removes from the hot
+path: the six independent slot x polarity aggregations (each re-gathering
+the same edge stream and re-walking the bucket-kernel schedule) collapse
+to one grouped aggregation per direction.  Reported per configuration:
+
+  * probe counts per layer — edge-stream gathers, bucket-kernel walks,
+    and individual pallas_call launches (trace-time counters in
+    ``repro.kernels.groot_spmm.PROBE``);
+  * forward wall-clock (this CPU container runs Pallas interpret=True,
+    so wall-clock ranks dispatch/launch overhead, not TPU time — the
+    probe counts are the hardware-portable signal);
+  * plan-cache effect: plans/pairs built on the first vs a repeated
+    forward over the same structure.
+
+    PYTHONPATH=src python -m benchmarks.bench_grouped [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, save_table
+from repro.core import aig as A
+from repro.core import gnn
+from repro.kernels import ops
+from repro.kernels.groot_spmm import probe_snapshot, reset_probe
+from repro.kernels.plan_cache import PLAN_CACHE
+
+
+def _forward_once(params, g, x, inv, slot, pair):
+    out = gnn.forward(
+        params, x, jnp.asarray(g.edge_src), jnp.asarray(g.edge_dst), inv, slot,
+        num_nodes=g.num_nodes, agg=pair,
+    )
+    jax.block_until_ready(out)
+    return out
+
+
+def run(bits_list, backends, quick=False):
+    cfg = gnn.GNNConfig(in_features=4, hidden=8 if quick else 32,
+                        num_layers=2 if quick else 4)
+    params = gnn.init_params(cfg, jax.random.key(0))
+    rows = []
+    for bits in bits_list:
+        design = A.make_design("csa", bits)
+        g = design.to_edge_graph()
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((g.num_nodes, 4)), jnp.float32)
+        inv = None if g.edge_inv is None else jnp.asarray(g.edge_inv)
+        slot = None if g.edge_slot is None else jnp.asarray(g.edge_slot)
+        for backend in backends:
+            pc0 = PLAN_CACHE.snapshot()
+            pair = ops.make_agg_pair(g.edge_src, g.edge_dst, g.num_nodes, backend)
+            pc1 = PLAN_CACHE.snapshot()
+            # plans are a per-(graph, backend) property shared by both
+            # modes; 0 means the structure was already cached this process
+            plans_built = pc1.builds - pc0.builds
+            for mode, p in (("grouped", pair), ("per-group", ops.ungrouped(pair))):
+                _forward_once(params, g, x, inv, slot, p)  # warmup dispatch
+                reset_probe()
+                t0 = time.perf_counter()
+                want = _forward_once(params, g, x, inv, slot, p)
+                dt = time.perf_counter() - t0
+                probe = probe_snapshot()
+                rows.append(
+                    {
+                        "bits": bits,
+                        "backend": backend,
+                        "mode": mode,
+                        "gathers/layer": probe["edge_stream_gathers"] / cfg.num_layers,
+                        "walks/layer": probe["kernel_walks"] / cfg.num_layers,
+                        "launches/layer": probe["pallas_calls"] / cfg.num_layers,
+                        "wall_s": round(dt, 3),
+                        "plans_built": plans_built,
+                        "edges": g.num_edges,
+                    }
+                )
+                del want
+        # plan-cache effect: same structure again -> zero builds
+        pc2 = PLAN_CACHE.snapshot()
+        ops.make_agg_pair(g.edge_src, g.edge_dst, g.num_nodes, backends[0])
+        pc3 = PLAN_CACHE.snapshot()
+        assert pc3.builds == pc2.builds, "plan cache failed to reuse structure"
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    if args.quick:
+        rows = run([8], ["groot"], quick=True)
+    else:
+        rows = run([8, 16], ["groot", "groot_mxu", "groot_fused"], quick=False)
+    print_table("grouped vs per-group SpMM (6 -> 2 per layer)", rows)
+    save_table("grouped", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ def main(argv=None):
     from benchmarks import (
         bench_accuracy,
         bench_features,
+        bench_grouped,
         bench_memory,
         bench_service,
         bench_spmm,
@@ -34,6 +35,7 @@ def main(argv=None):
         ("accuracy (Fig. 6/7)", bench_accuracy.main),
         ("memory (Fig. 8 / Table II)", bench_memory.main),
         ("spmm kernels (Fig. 9)", bench_spmm.main),
+        ("grouped multi-polarity spmm (PR 2)", bench_grouped.main),
         ("verification runtime (Fig. 10)", bench_verification.main),
         ("feature ablation (§III-B)", bench_features.main),
         ("verification service (repro.service)", bench_service.main),

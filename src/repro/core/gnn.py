@@ -102,13 +102,24 @@ def forward(
     direction, which is where the HD/LD degree polarization lives.
 
     ``agg`` is an :class:`repro.kernels.ops.AggPair` (or None for the
-    segment-sum reference).  When the pair exposes a fused
-    aggregate+matmul (``in_agg_mm``), the per-group ``(agg*norm) @ W`` is
-    folded into the kernel (weights pre-scaled by the norm would be wrong
-    since the norm is per-*destination*; instead we post-scale — the fused
-    path therefore computes agg @ W and we fold the norm into the edge
-    weights, which IS per-destination exact because every edge's
-    destination norm is known per edge).
+    segment-sum reference).  Paths, most specific wins:
+
+      * **grouped** (``in_agg_grouped`` present — all ``groot*``
+        backends): the four fanin and two fanout groups are *channels of
+        one SpMM*.  The ``(E, 4)`` / ``(E, 2)`` group-weight matrices are
+        built once, the mean norms are folded into them (exact — every
+        edge's destination norm is known per edge), and each layer issues
+        ONE grouped aggregation per direction: 6 -> 2 edge-stream gathers
+        and 6 -> 2 bucket-kernel walks per layer.  The per-group ``@ W``
+        collapses to one ``einsum('gnf,gfh->nh')`` contraction (or is
+        fused into the grouped kernel when ``in_agg_mm_grouped`` exists).
+      * **fused per-group** (``in_agg_mm``): per-group ``agg @ W`` inside
+        the kernel, norm folded into edge weights (post-scaling would be
+        wrong: the aggregated row is never materialised).
+      * **per-group loop** (ref/onehot/None): aggregate per group, then
+        post-scale by the per-destination norm ((N,1) elementwise — under
+        SPMD a per-edge gather of the (N,) norm array forces a 0.7 GB
+        all-gather per group, measured in §Perf).
     """
     one = jnp.ones_like(edge_dst, dtype=x.dtype)
     w_neg = edge_inv.astype(x.dtype) if edge_inv is not None else jnp.zeros_like(one)
@@ -122,13 +133,15 @@ def forward(
         "w_in_r_neg": w_r * w_neg,
     }
     out_w = {"w_out_pos": w_pos, "w_out_neg": w_neg}
+
+    in_grouped = getattr(agg, "in_agg_grouped", None)
+    out_grouped = getattr(agg, "out_agg_grouped", None)
+    if in_grouped is not None and out_grouped is not None:
+        return _forward_grouped(
+            params, x, edge_src, edge_dst, group_w, out_w, num_nodes, agg
+        )
+
     deg = lambda idx, w: jax.ops.segment_sum(w, idx, num_segments=num_nodes)
-    # Mean normalisation: 1/deg per DESTINATION row.  Two equivalent
-    # placements: post-scale the aggregated row ((N,1) elementwise — the
-    # default: under SPMD a per-edge gather of the (N,) norm array forces
-    # a 0.7 GB all-gather per group, measured in §Perf), or fold into the
-    # edge weights (w_e /= deg(dst_e)) — required by the fused kernel,
-    # which never materialises the aggregated row.
     norm_in = {
         nm: (1.0 / jnp.maximum(deg(edge_dst, w), 1.0))[:, None]
         for nm, w in group_w.items()
@@ -158,6 +171,39 @@ def forward(
                 acc = acc + (in_agg(h, group_w[nm]) * norm_in[nm]) @ layer[nm]
         for nm in OUT_GROUPS:
             acc = acc + (out_agg(h, out_w[nm]) * norm_out[nm]) @ layer[nm]
+        h = jax.nn.relu(acc)
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def _forward_grouped(params, x, edge_src, edge_dst, group_w, out_w, num_nodes, agg):
+    """Grouped hot path: one aggregation per direction per layer.
+
+    Group weights become ``(E, G)`` matrices (column order = IN_GROUPS /
+    OUT_GROUPS) with the per-destination mean norm folded in, so the
+    grouped SpMM's output planes are already normalised and the layer
+    reduces to ``einsum('gnf,gfh->nh')`` over the stacked group weights.
+    """
+    wg_in = jnp.stack([group_w[nm] for nm in IN_GROUPS], axis=1)     # (E, 4)
+    wg_out = jnp.stack([out_w[nm] for nm in OUT_GROUPS], axis=1)     # (E, 2)
+    # per-group in/out degrees in ONE segment-sum per direction (the
+    # per-group path needs six)
+    deg_in = jax.ops.segment_sum(wg_in, edge_dst, num_segments=num_nodes)
+    deg_out = jax.ops.segment_sum(wg_out, edge_src, num_segments=num_nodes)
+    wg_in = wg_in * (1.0 / jnp.maximum(deg_in, 1.0))[edge_dst]
+    wg_out = wg_out * (1.0 / jnp.maximum(deg_out, 1.0))[edge_src]
+
+    h = x
+    for layer in params["layers"]:
+        acc = h @ layer["w_self"] + layer["b"]
+        w_in_stack = jnp.stack([layer[nm] for nm in IN_GROUPS], axis=0)
+        w_out_stack = jnp.stack([layer[nm] for nm in OUT_GROUPS], axis=0)
+        if agg.in_agg_mm_grouped is not None:
+            acc = acc + agg.in_agg_mm_grouped(h, wg_in, w_in_stack)
+        else:
+            gin = agg.in_agg_grouped(h, wg_in)                       # (4, N, F)
+            acc = acc + jnp.einsum("gnf,gfh->nh", gin.astype(acc.dtype), w_in_stack)
+        gout = agg.out_agg_grouped(h, wg_out)                        # (2, N, F)
+        acc = acc + jnp.einsum("gnf,gfh->nh", gout.astype(acc.dtype), w_out_stack)
         h = jax.nn.relu(acc)
     return h @ params["head"]["w"] + params["head"]["b"]
 

@@ -36,6 +36,7 @@ from repro.core.graph import EdgeGraph, batch_graphs
 from repro.core.partition import PARTITIONERS
 from repro.core.regrowth import Subgraph, extract_partitions, boundary_edge_fraction
 from repro.core.verify import VerifyResult, verify
+from repro.kernels.plan_cache import PLAN_CACHE
 
 
 @dataclasses.dataclass
@@ -62,6 +63,13 @@ class PipelineResult:
     verdict: Optional[VerifyResult]
     num_nodes: int
     num_edges: int
+    # structural plan-cache activity during this run's inference stage:
+    # {"builds": new plans/pairs built, "hits": reused}.  A repeated run
+    # over the same structure shows builds == 0.  Deltas of the
+    # process-global cache counters: attribution is only exact when no
+    # other thread (e.g. a live VerificationService) runs inference
+    # concurrently.
+    plan_cache: dict = dataclasses.field(default_factory=dict)
 
 
 def memory_model_bytes(
@@ -200,7 +208,9 @@ def run_pipeline(
     """Inference + verification with a trained model (composes the stages)."""
     prep = prepare(cfg)
     t0 = time.perf_counter()
+    pc_before = PLAN_CACHE.snapshot()
     pred = infer(params, prep)
+    pc_after = PLAN_CACHE.snapshot()
     t_inf = time.perf_counter() - t0
     mem_full, peak_mem = prep.memory_bytes()
     acc = gnn.accuracy(pred, prep.labels)
@@ -215,6 +225,10 @@ def run_pipeline(
         verdict=verdict,
         num_nodes=prep.num_nodes,
         num_edges=prep.num_edges,
+        plan_cache={
+            "builds": pc_after.builds - pc_before.builds,
+            "hits": pc_after.hits - pc_before.hits,
+        },
     )
 
 

@@ -58,6 +58,26 @@ SUBLANE = 8            # f32 sublane quantum
 
 
 # ---------------------------------------------------------------------------
+# Hot-path probe.  Counters increment at *trace* time (or per eager call),
+# so tracing one forward pass measures exactly how many times the edge
+# stream is gathered and how many times the bucket-kernel schedule is
+# walked — the quantities the grouped-SpMM refactor reduces from 6 to 2
+# per layer.  ``pallas_calls`` counts individual kernel launches.
+# ---------------------------------------------------------------------------
+
+PROBE = {"edge_stream_gathers": 0, "kernel_walks": 0, "pallas_calls": 0}
+
+
+def reset_probe() -> None:
+    for k in PROBE:
+        PROBE[k] = 0
+
+
+def probe_snapshot() -> dict:
+    return dict(PROBE)
+
+
+# ---------------------------------------------------------------------------
 # Host-side plan (the count-sort / row-assembly of paper Fig. 5, step B)
 # ---------------------------------------------------------------------------
 
@@ -212,6 +232,7 @@ def ld_bucket_apply(
     msgs: jax.Array, deg: int, rows_per_tile: int, *, interpret: bool, mxu: bool
 ) -> jax.Array:
     """Run the LD kernel over one ELL slab.  msgs: (R_pad * deg, F_pad)."""
+    PROBE["pallas_calls"] += 1
     f_pad = msgs.shape[1]
     r_pad = msgs.shape[0] // deg
     r_t = rows_per_tile
@@ -279,6 +300,7 @@ def hd_apply(
     chunks revisit the same output block back-to-back (required for the
     VMEM accumulation pattern).
     """
+    PROBE["pallas_calls"] += 1
     f_pad = msgs.shape[1]
     n_chunks = msgs.shape[0] // e_t
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -311,6 +333,8 @@ def apply_plan(
     degree-bucketed kernels.  ``plan`` is static (host numpy); ``x``/``w``
     are traced.  Matches :func:`repro.kernels.ref.spmm_ref`.
     """
+    PROBE["edge_stream_gathers"] += 1
+    PROBE["kernel_walks"] += 1
     n, f = x.shape
     f_extra = -f % F_TILE
     x_p = jnp.pad(x, ((0, 1), (0, f_extra)))  # +1 zero row = gather pad target
@@ -339,3 +363,188 @@ def apply_plan(
         out = out.at[jnp.asarray(plan.hd.rows)].add(red, mode="drop")
 
     return out[:, :f].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Grouped multi-polarity SpMM.  The SAGE layer's six slot x polarity
+# aggregations share one plan and identical gather columns — only the
+# per-edge weights differ.  The grouped kernels take a (slots, G) weight
+# matrix, gather ``x[src]`` ONCE, broadcast-multiply by the G weight
+# columns inside the tile, and reduce every group in the same pass:
+# 6 gathers + 6 kernel walks per layer collapse to one per direction.
+# Output layout is group-major (G, R, F) — per-group (N, F) planes the
+# layer contracts directly via ``einsum('gnf,gfh->nh')``.
+# ---------------------------------------------------------------------------
+
+def _ld_kernel_grouped(wg_ref, msgs_ref, o_ref, *, rows: int, deg: int):
+    """(R_t*d, F_t) tile + (R_t*d, G) weights -> (G, R_t, F_t) row sums.
+
+    One edge-message load serves every group; the per-group weighting is
+    a VREG broadcast (f32 accumulation as in the ungrouped kernel)."""
+    m = msgs_ref[...].astype(jnp.float32)
+    w = wg_ref[...].astype(jnp.float32)
+    prod = w.T[:, :, None] * m[None, :, :]            # (G, R_t*d, F_t)
+    o_ref[...] = prod.reshape(w.shape[1], rows, deg, m.shape[-1]).sum(axis=2)
+
+
+def _ld_kernel_grouped_mxu(red_ref, wg_ref, msgs_ref, o_ref, *, groups: int):
+    """MXU path: per group, one-hot block-diag reduction @ weighted tile.
+
+    ``groups`` is static and tiny (2 or 4), so the loop unrolls into G
+    back-to-back systolic matmuls over the SAME resident message tile."""
+    m = msgs_ref[...]
+    w = wg_ref[...]
+    red = red_ref[...]
+    o_ref[...] = jnp.stack(
+        [
+            jax.lax.dot(red, m * w[:, g][:, None], preferred_element_type=o_ref.dtype)
+            for g in range(groups)
+        ],
+        axis=0,
+    )
+
+
+def ld_grouped_apply(
+    msgs: jax.Array,
+    wg: jax.Array,
+    deg: int,
+    rows_per_tile: int,
+    *,
+    interpret: bool,
+    mxu: bool,
+) -> jax.Array:
+    """Grouped LD reduction over one ELL slab.
+
+    msgs: (R_pad * deg, F_pad); wg: (R_pad * deg, G) -> (G, R_pad, F_pad).
+    """
+    PROBE["pallas_calls"] += 1
+    f_pad = msgs.shape[1]
+    g = wg.shape[1]
+    r_pad = msgs.shape[0] // deg
+    r_t = rows_per_tile
+    grid = (r_pad // r_t, f_pad // F_TILE)
+    out_shape = jax.ShapeDtypeStruct((g, r_pad, f_pad), jnp.float32)
+    if mxu and deg > 1:
+        red = np.zeros((r_t, r_t * deg), dtype=np.float32)
+        for r in range(r_t):
+            red[r, r * deg : (r + 1) * deg] = 1.0
+        return pl.pallas_call(
+            functools.partial(_ld_kernel_grouped_mxu, groups=g),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((r_t, r_t * deg), lambda i, j: (0, 0)),
+                pl.BlockSpec((r_t * deg, g), lambda i, j: (i, 0)),
+                pl.BlockSpec((r_t * deg, F_TILE), lambda i, j: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((g, r_t, F_TILE), lambda i, j: (0, i, j)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(jnp.asarray(red, msgs.dtype), wg.astype(msgs.dtype), msgs)
+    return pl.pallas_call(
+        functools.partial(_ld_kernel_grouped, rows=r_t, deg=deg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r_t * deg, g), lambda i, j: (i, 0)),
+            pl.BlockSpec((r_t * deg, F_TILE), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((g, r_t, F_TILE), lambda i, j: (0, i, j)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wg, msgs)
+
+
+def _hd_kernel_grouped(meta_ref, wg_ref, msgs_ref, o_ref):
+    """One E_t-edge chunk -> per-group partial sums for the chunk's row.
+
+    The weighted reduction is one (G, E_t) @ (E_t, F_t) systolic matmul;
+    accumulation across a row's chunks revisits the same (G, 1, F_t)
+    output block in VMEM, exactly like the ungrouped HD kernel."""
+    c = pl.program_id(1)
+    m = msgs_ref[...].astype(jnp.float32)
+    w = wg_ref[...].astype(jnp.float32)
+    part = jax.lax.dot(w.T, m, preferred_element_type=jnp.float32)[:, None, :]
+
+    @pl.when(meta_ref[c, 1] == 1)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(meta_ref[c, 1] == 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def hd_grouped_apply(
+    msgs: jax.Array,
+    wg: jax.Array,
+    chunk_meta: np.ndarray,
+    n_hd_rows: int,
+    e_t: int,
+    *,
+    interpret: bool,
+) -> jax.Array:
+    """msgs: (n_chunks * e_t, F_pad); wg: (n_chunks * e_t, G)
+    -> (G, n_hd_rows, F_pad)."""
+    PROBE["pallas_calls"] += 1
+    f_pad = msgs.shape[1]
+    g = wg.shape[1]
+    n_chunks = msgs.shape[0] // e_t
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(f_pad // F_TILE, n_chunks),
+        in_specs=[
+            pl.BlockSpec((e_t, g), lambda j, c, meta: (c, 0)),
+            pl.BlockSpec((e_t, F_TILE), lambda j, c, meta: (c, j)),
+        ],
+        out_specs=pl.BlockSpec((g, 1, F_TILE), lambda j, c, meta: (0, meta[c, 0], j)),
+    )
+    return pl.pallas_call(
+        _hd_kernel_grouped,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, n_hd_rows, f_pad), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(chunk_meta), wg, msgs)
+
+
+def apply_plan_grouped(
+    plan: SpmmPlan,
+    x: jax.Array,
+    wg: jax.Array,
+    *,
+    interpret: bool = True,
+    mxu: bool = False,
+) -> jax.Array:
+    """All-groups SpMM: ``out[g, r] = sum_{e: dst[e]=r} wg[e, g] * x[src[e]]``.
+
+    One walk of the bucket schedule and one gather of the edge stream
+    serve every group — ``wg`` is ``(E, G)`` with one weight column per
+    slot x polarity group.  Returns ``(G, N, F)`` in ``x.dtype``.
+    Matches ``stack([apply_plan(plan, x, wg[:, g]) for g])``.
+    """
+    PROBE["edge_stream_gathers"] += 1
+    PROBE["kernel_walks"] += 1
+    n, f = x.shape
+    g = wg.shape[1]
+    f_extra = -f % F_TILE
+    x_p = jnp.pad(x, ((0, 1), (0, f_extra)))  # +1 zero row = gather pad target
+    wg_p = jnp.pad(wg.astype(jnp.float32), ((0, 1), (0, 0)))  # row E = 0 weight
+
+    out = jnp.zeros((g, n, f + f_extra), jnp.float32)
+    for b in plan.buckets:
+        msgs = jnp.take(x_p, jnp.asarray(b.cols), axis=0)
+        wge = jnp.take(wg_p, jnp.asarray(b.eids), axis=0)
+        red = ld_grouped_apply(
+            msgs, wge, b.deg, b.rows_per_tile, interpret=interpret, mxu=mxu
+        )
+        rows = jnp.asarray(np.where(b.rows < 0, n, b.rows).astype(np.int32))
+        out = out.at[:, rows].add(red, mode="drop")
+
+    if plan.hd is not None:
+        msgs = jnp.take(x_p, jnp.asarray(plan.hd.cols), axis=0)
+        wge = jnp.take(wg_p, jnp.asarray(plan.hd.eids), axis=0)
+        red = hd_grouped_apply(
+            msgs, wge, plan.hd.chunk_meta, len(plan.hd.rows), plan.e_t,
+            interpret=interpret,
+        )
+        out = out.at[:, jnp.asarray(plan.hd.rows)].add(red, mode="drop")
+
+    return out[:, :, :f].astype(x.dtype)

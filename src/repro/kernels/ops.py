@@ -28,9 +28,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import plan_cache as pc
 from repro.kernels import ref as kref
-from repro.kernels.groot_spmm import SpmmPlan, apply_plan, build_plan
-from repro.kernels.fused_sage import fused_ld_matmul
+from repro.kernels.groot_spmm import (
+    PROBE,
+    SpmmPlan,
+    apply_plan,
+    apply_plan_grouped,
+    build_plan,
+    hd_grouped_apply,
+)
+from repro.kernels.fused_sage import fused_ld_matmul, fused_ld_matmul_grouped
 
 BACKENDS = ("ref", "onehot", "groot", "groot_mxu", "groot_fused")
 
@@ -51,7 +59,15 @@ def onehot_spmm(x, edge_src, edge_dst, num_nodes: int, w=None):
 
 @dataclasses.dataclass
 class AggPair:
-    """Aggregation callables for one graph (+ optional fused path)."""
+    """Aggregation callables for one graph (+ optional fused/grouped paths).
+
+    The grouped entry points take a ``(E, G)`` weight matrix — one column
+    per slot x polarity group — and compute every group's aggregation in
+    a single plan walk with a single gather of the edge stream, returning
+    group-major ``(G, N, F)``.  They are ``None`` for backends that have
+    no shared plan to exploit (``ref``/``onehot``), where the model layer
+    keeps its per-group loop.
+    """
 
     in_agg: Callable      # (x, w) -> (N, F) over fanin edges
     out_agg: Callable     # (x, w) -> (N, F) over fanout edges
@@ -60,12 +76,26 @@ class AggPair:
     in_agg_mm: Optional[Callable] = None
     in_plan: Optional[SpmmPlan] = None
     out_plan: Optional[SpmmPlan] = None
+    # grouped paths: (x, wg (E, G)) -> (G, N, F) in one plan walk
+    in_agg_grouped: Optional[Callable] = None
+    out_agg_grouped: Optional[Callable] = None
+    # grouped fuse: (x, wg (E, G), w_stack (G, F, H)) -> (N, H)
+    in_agg_mm_grouped: Optional[Callable] = None
 
     def __hash__(self):  # jit static-arg friendliness
         return id(self)
 
     def __eq__(self, other):
         return self is other
+
+
+def ungrouped(pair: AggPair) -> AggPair:
+    """A copy of ``pair`` with the grouped entry points stripped — forces
+    the model layer back onto the per-group loop (parity tests and the
+    grouped-vs-per-group benchmark)."""
+    return dataclasses.replace(
+        pair, in_agg_grouped=None, out_agg_grouped=None, in_agg_mm_grouped=None
+    )
 
 
 def _segment_pair(edge_src, edge_dst, num_nodes) -> AggPair:
@@ -89,12 +119,23 @@ def _onehot_pair(edge_src, edge_dst, num_nodes) -> AggPair:
 
 
 def _groot_pair(
-    edge_src, edge_dst, num_nodes, *, mxu: bool, fused: bool, interpret: bool = True
+    edge_src,
+    edge_dst,
+    num_nodes,
+    *,
+    mxu: bool,
+    fused: bool,
+    interpret: bool = True,
+    use_cache: bool = True,
 ) -> AggPair:
     src = np.asarray(edge_src)
     dst = np.asarray(edge_dst)
-    in_plan = build_plan(src, dst, num_nodes)
-    out_plan = build_plan(dst, src, num_nodes)
+    if use_cache:
+        in_plan = pc.cached_plan(src, dst, num_nodes)
+        out_plan = pc.cached_plan(dst, src, num_nodes)
+    else:
+        in_plan = build_plan(src, dst, num_nodes)
+        out_plan = build_plan(dst, src, num_nodes)
 
     def in_agg(x, w=None):
         return apply_plan(in_plan, x, w, interpret=interpret, mxu=mxu)
@@ -102,11 +143,23 @@ def _groot_pair(
     def out_agg(x, w=None):
         return apply_plan(out_plan, x, w, interpret=interpret, mxu=mxu)
 
+    def in_agg_grouped(x, wg):
+        return apply_plan_grouped(in_plan, x, wg, interpret=interpret, mxu=mxu)
+
+    def out_agg_grouped(x, wg):
+        return apply_plan_grouped(out_plan, x, wg, interpret=interpret, mxu=mxu)
+
     in_agg_mm = None
+    in_agg_mm_grouped = None
     if fused:
 
         def in_agg_mm(x, w, w_mat):
             return _apply_plan_fused(in_plan, x, w, w_mat, interpret=interpret)
+
+        def in_agg_mm_grouped(x, wg, w_stack):
+            return _apply_plan_fused_grouped(
+                in_plan, x, wg, w_stack, interpret=interpret
+            )
 
     return AggPair(
         in_agg=in_agg,
@@ -115,6 +168,9 @@ def _groot_pair(
         in_agg_mm=in_agg_mm,
         in_plan=in_plan,
         out_plan=out_plan,
+        in_agg_grouped=in_agg_grouped,
+        out_agg_grouped=out_agg_grouped,
+        in_agg_mm_grouped=in_agg_mm_grouped,
     )
 
 
@@ -126,6 +182,8 @@ def _apply_plan_fused(plan: SpmmPlan, x, w, w_mat, *, interpret: bool):
     """
     from repro.kernels.groot_spmm import F_TILE, hd_apply
 
+    PROBE["edge_stream_gathers"] += 1
+    PROBE["kernel_walks"] += 1
     n, f = x.shape
     h = w_mat.shape[1]
     f_extra = -f % F_TILE
@@ -154,6 +212,50 @@ def _apply_plan_fused(plan: SpmmPlan, x, w, w_mat, *, interpret: bool):
         out = out.at[jnp.asarray(plan.hd.rows)].add(
             red[:, :f] @ wm_p[:f, :], mode="drop"
         )
+    return out[:, :h]
+
+
+def _apply_plan_fused_grouped(plan: SpmmPlan, x, wg, w_stack, *, interpret: bool):
+    """Grouped fused path: ``sum_g (group-g aggregation) @ w_stack[g]``.
+
+    One gather of the edge stream and one walk of the bucket schedule
+    serve all G groups; per LD slab the grouped fused kernel keeps every
+    group's (R_t, F) aggregate in VMEM and sums the G MXU products before
+    the single (R_t, H_t) store.  HD rows reduce through the grouped HD
+    kernel and contract with the weight stack outside (HD rows are few).
+    """
+    from repro.kernels.groot_spmm import F_TILE
+
+    PROBE["edge_stream_gathers"] += 1
+    PROBE["kernel_walks"] += 1
+    n, f = x.shape
+    g_n, _, h = w_stack.shape
+    f_extra = -f % F_TILE
+    h_extra = -h % F_TILE
+    x_p = jnp.pad(x, ((0, 1), (0, f_extra)))
+    wg_p = jnp.pad(wg.astype(x.dtype), ((0, 1), (0, 0)))
+    wm_p = jnp.pad(w_stack.astype(x.dtype), ((0, 0), (0, f_extra), (0, h_extra)))
+
+    out = jnp.zeros((n, h + h_extra), x.dtype)
+    for b in plan.buckets:
+        msgs = jnp.take(x_p, jnp.asarray(b.cols), axis=0)
+        wge = jnp.take(wg_p, jnp.asarray(b.eids), axis=0)
+        red = fused_ld_matmul_grouped(
+            msgs, wge, wm_p, b.deg, b.rows_per_tile, interpret=interpret
+        )
+        rows = jnp.asarray(np.where(b.rows < 0, n, b.rows).astype(np.int32))
+        out = out.at[rows].add(red, mode="drop")
+    if plan.hd is not None:
+        msgs = jnp.take(x_p, jnp.asarray(plan.hd.cols), axis=0)
+        wge = jnp.take(wg_p, jnp.asarray(plan.hd.eids), axis=0)
+        red = hd_grouped_apply(
+            msgs, wge, plan.hd.chunk_meta, len(plan.hd.rows), plan.e_t,
+            interpret=interpret,
+        )  # (G, n_hd, F_pad)
+        dense = jnp.einsum(
+            "gnf,gfh->nh", red[:, :, :f].astype(x.dtype), wm_p[:, :f, :]
+        )
+        out = out.at[jnp.asarray(plan.hd.rows)].add(dense, mode="drop")
     return out[:, :h]
 
 
@@ -222,19 +324,50 @@ def pad_graph_arrays(
     return src, dst, inv, slot
 
 
-def make_agg_pair(edge_src, edge_dst, num_nodes: int, backend: str = "ref") -> AggPair:
-    """Build the aggregation pair for a graph under the given backend."""
+def _build_pair(edge_src, edge_dst, num_nodes: int, backend: str,
+                use_cache: bool) -> AggPair:
     if backend == "ref":
         return _segment_pair(edge_src, edge_dst, num_nodes)
     if backend == "onehot":
         return _onehot_pair(edge_src, edge_dst, num_nodes)
     if backend == "groot":
-        return _groot_pair(edge_src, edge_dst, num_nodes, mxu=False, fused=False)
+        return _groot_pair(edge_src, edge_dst, num_nodes, mxu=False, fused=False,
+                           use_cache=use_cache)
     if backend == "groot_mxu":
-        return _groot_pair(edge_src, edge_dst, num_nodes, mxu=True, fused=False)
+        return _groot_pair(edge_src, edge_dst, num_nodes, mxu=True, fused=False,
+                           use_cache=use_cache)
     if backend == "groot_fused":
-        return _groot_pair(edge_src, edge_dst, num_nodes, mxu=False, fused=True)
+        return _groot_pair(edge_src, edge_dst, num_nodes, mxu=False, fused=True,
+                           use_cache=use_cache)
     raise ValueError(f"unknown backend {backend!r} (want one of {BACKENDS})")
+
+
+def make_agg_pair(
+    edge_src, edge_dst, num_nodes: int, backend: str = "ref", *, use_cache: bool = True
+) -> AggPair:
+    """Build (or fetch) the aggregation pair for a graph under a backend.
+
+    When the edge arrays are concrete host numpy, the pair comes from the
+    process-wide structural :data:`~repro.kernels.plan_cache.PLAN_CACHE`:
+    the same structure always yields the *same object*, so jit callers
+    holding the pair as a static argument hit their compile cache instead
+    of retracing (``predict_partitioned`` over recurring subgraphs, the
+    service scheduler over recurring packed batches).  Traced inputs
+    (e.g. the onehot backend built inside a jitted forward) bypass the
+    cache — they cannot be content-hashed.
+    """
+    cacheable = (
+        use_cache
+        and isinstance(edge_src, np.ndarray)
+        and isinstance(edge_dst, np.ndarray)
+    )
+    if not cacheable:
+        return _build_pair(edge_src, edge_dst, num_nodes, backend, use_cache=False)
+    key = ("pair", pc.graph_key(edge_src, edge_dst, num_nodes), backend)
+    return pc.PLAN_CACHE.get_or_build(
+        key,
+        lambda: _build_pair(edge_src, edge_dst, num_nodes, backend, use_cache=True),
+    )
 
 
 def groot_spmm(x, edge_src, edge_dst, num_nodes: int, w=None, *, backend="groot"):

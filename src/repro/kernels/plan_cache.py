@@ -1,0 +1,125 @@
+"""Process-wide structural plan cache.
+
+A :class:`~repro.kernels.groot_spmm.SpmmPlan` is a pure function of the
+graph structure (edge endpoints + node count) — and verification traffic
+is heavily structure-duplicated: regression farms resubmit identical
+netlists, ``predict_partitioned`` walks the same subgraphs every call,
+and the service scheduler packs the same padded disjoint unions over and
+over.  Rebuilding the O(E) host-side count-sort (and, worse, a fresh
+:class:`~repro.kernels.ops.AggPair`, whose identity keys the jit cache)
+for a structure the process has already served wastes host time AND
+forces a full XLA retrace.
+
+This module gives both layers one LRU keyed on a content hash of the
+edge arrays (the kernel-layer analogue of ``repro.io.aiger``'s
+format-invariant structural hash):
+
+  * ``("plan", graph_key, e_t)``  -> a built ``SpmmPlan``
+  * ``("pair", graph_key, backend)`` -> a built ``AggPair`` (see
+    ``repro.kernels.ops.make_agg_pair``) — a hit returns the *same
+    object*, so ``jax.jit(..., static_argnames=("agg",))`` callers get a
+    compile-cache hit instead of a retrace.
+
+Thread-safe (the service prepare pool and device worker both read it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import Callable, Hashable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PlanCacheStats:
+    hits: int = 0
+    misses: int = 0
+    builds: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PlanCache:
+    """LRU of structure-keyed build products (plans, agg pairs)."""
+
+    def __init__(self, capacity: int = 256):
+        assert capacity > 0
+        self.capacity = capacity
+        self._lock = threading.RLock()
+        self._data: OrderedDict[Hashable, object] = OrderedDict()
+        self.stats = PlanCacheStats()
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], object]) -> object:
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.stats.hits += 1
+                return self._data[key]
+            self.stats.misses += 1
+            # build under the lock: builders are host-side and building the
+            # same plan twice concurrently would defeat the jit-identity
+            # property the pair cache exists to provide
+            value = builder()
+            self.stats.builds += 1
+            self._data[key] = value
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self.stats.evictions += 1
+            return value
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            self.stats = PlanCacheStats()
+
+    def snapshot(self) -> PlanCacheStats:
+        with self._lock:
+            return dataclasses.replace(self.stats)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+
+#: The process-wide instance every layer shares (pipeline, predict paths,
+#: service scheduler).  Sized for a service's working set of distinct
+#: structures; entries are host numpy + closures, so cheap relative to
+#: the retraces they avoid.  NOTE: the same-object (and so jit-cache-hit
+#: / 0-builds) guarantee only holds while a structure stays resident in
+#: this LRU — once the working set exceeds ``capacity``, an evicted
+#: structure's next appearance rebuilds a fresh pair (new identity, one
+#: retrace, ``builds`` increments).  Size ``capacity`` above the traffic
+#: working set, and keep it >= any scheduler's ``max_structures``.
+PLAN_CACHE = PlanCache(capacity=256)
+
+
+def graph_key(edge_src, edge_dst, num_nodes: int) -> str:
+    """Content hash of a graph structure (direction-sensitive: the fanin
+    and fanout plans of the same graph hash differently, as they must)."""
+    h = hashlib.sha256()
+    h.update(np.int64(num_nodes).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(edge_src, dtype=np.int64)).tobytes())
+    h.update(b"|")
+    h.update(np.ascontiguousarray(np.asarray(edge_dst, dtype=np.int64)).tobytes())
+    return h.hexdigest()
+
+
+def cached_plan(edge_src, edge_dst, num_nodes: int, *, e_t: int | None = None):
+    """``build_plan`` through the process-wide cache."""
+    from repro.kernels.groot_spmm import E_T, build_plan
+
+    e_t = E_T if e_t is None else e_t
+    key = ("plan", graph_key(edge_src, edge_dst, num_nodes), e_t)
+    return PLAN_CACHE.get_or_build(
+        key, lambda: build_plan(edge_src, edge_dst, num_nodes, e_t=e_t)
+    )

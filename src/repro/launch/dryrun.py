@@ -33,6 +33,20 @@ artifacts under experiments/dryrun/<mesh>/<arch>__<shape>.json.
 ART_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
 
+def _cost_fields(compiled):
+    """Normalise ``cost_analysis()`` across jax versions: older releases
+    return a one-element sequence of dicts (per device kind), newer ones a
+    single flat dict; either may be None."""
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
+
+
 def _mem_fields(compiled):
     ma = compiled.memory_analysis()
     fields = (
@@ -65,7 +79,7 @@ def run_cell(cell, mesh, mesh_name: str, save: bool = True) -> dict:
         compiled = lowered.compile()
         t_compile = time.perf_counter() - t0
 
-    cost = dict(compiled.cost_analysis() or {})
+    cost = _cost_fields(compiled)
     mem = _mem_fields(compiled)
     stats = hlo_mod.analyze(compiled.as_text())
     n_dev = mesh.devices.size

@@ -52,8 +52,10 @@ class ServiceConfig:
     num_partitions: int = 1
     regrow: bool = True
     partitioner: str = "multilevel"
-    backend: str = "ref"          # shape-stable backends only (see scheduler)
+    backend: str = "ref"          # shape-stable OR structure-keyed (see scheduler)
     capacity: int = 2             # same-bucket items packed per device call
+    max_structures: int = 64      # groot* backends: jit executables kept before
+                                  # a wholesale cache clear (memory bound)
     min_nodes: int = 64           # bucket floor (nodes)
     min_edges: int = 128          # bucket floor (edges)
     prepare_workers: int = 2
@@ -113,6 +115,7 @@ class VerificationService:
             capacity=config.capacity,
             min_nodes=config.min_nodes,
             min_edges=config.min_edges,
+            max_structures=config.max_structures,
         )
         self._pool = ThreadPoolExecutor(
             max_workers=config.prepare_workers, thread_name_prefix="svc-prepare"
@@ -212,6 +215,8 @@ class VerificationService:
         self.close()
 
     def stats(self) -> dict:
+        from repro.kernels.plan_cache import PLAN_CACHE
+
         s = self.scheduler.stats()
         return {
             "cache": self.cache.stats,
@@ -219,6 +224,8 @@ class VerificationService:
             "device_calls": s.run_count,
             "buckets": [(b.n_pad, b.e_pad) for b in s.buckets],
             "items_run": s.items_run,
+            # process-wide structural plan cache (groot* backends)
+            "plan_cache": PLAN_CACHE.snapshot(),
         }
 
     # -- workers -------------------------------------------------------------

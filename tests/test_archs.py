@@ -12,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # ~40 s of per-arch compiles; full-lane only
+
 from repro.configs import ARCHS, LM_ARCHS, get_config
 from repro.configs.base import abstract, materialize, model_spec_tree, param_tree
 from repro.configs.shapes import SHAPES, input_specs, supported_shapes

@@ -15,6 +15,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess jax inits + compiles; full lane
+
 REPO = Path(__file__).resolve().parent.parent
 
 

@@ -1,0 +1,142 @@
+"""Property-based invariants of ``build_plan`` (paper Fig. 5 step B).
+
+The degree count-sort / row-assembly is the load-bearing host-side step:
+every kernel result is only correct if the plan (a) covers every edge
+exactly once across LD buckets + HD chunks, (b) keeps each ELL slab
+degree-homogeneous, (c) marks exactly one ``is_first`` chunk per HD row
+(the VMEM accumulation init), and (d) pays at most the pow-2 padding
+bound.  Hypothesis (when installed) drives random *degree distributions*
+— including polarized ones with rows far beyond ``e_t`` — and a fixed
+seed grid covers the same corners in bare environments.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.kernels.groot_spmm import build_plan
+
+
+def graph_from_degrees(rng, n: int, e_t: int, hd_frac: float, scale: int):
+    """Random graph built from an explicit degree sequence so every LD
+    bucket and the HD path can be forced deterministically."""
+    deg = rng.geometric(p=0.35, size=n) - 1          # mostly 0..12
+    deg = np.minimum(deg * scale, 4 * e_t)
+    hd_rows = rng.random(n) < hd_frac
+    deg[hd_rows] += rng.integers(e_t + 1, 3 * e_t + 1, size=int(hd_rows.sum()))
+    dst = np.repeat(np.arange(n, dtype=np.int64), deg)
+    src = rng.integers(0, n, dst.shape[0], dtype=np.int64)
+    perm = rng.permutation(dst.shape[0])             # edge order must not matter
+    return src[perm], dst[perm]
+
+
+def check_plan_invariants(src, dst, n: int, e_t: int) -> None:
+    e = int(dst.shape[0])
+    deg = np.bincount(dst, minlength=n)
+    plan = build_plan(src, dst, n, e_t=e_t)
+
+    # --- (a) every edge id appears exactly once across LD buckets + HD ---
+    all_eids = [b.eids for b in plan.buckets]
+    if plan.hd is not None:
+        all_eids.append(plan.hd.eids)
+    seen = np.concatenate(all_eids) if all_eids else np.zeros(0, np.int64)
+    real = np.sort(seen[seen < e])
+    np.testing.assert_array_equal(real, np.arange(e))
+    # and each edge's slot points at its true source
+    for b in plan.buckets:
+        live = b.eids < e
+        np.testing.assert_array_equal(b.cols[live], src[b.eids[live]])
+        assert (b.cols[~live] == n).all()
+    if plan.hd is not None:
+        live = plan.hd.eids < e
+        np.testing.assert_array_equal(plan.hd.cols[live], src[plan.hd.eids[live]])
+
+    # --- (b) buckets are degree-homogeneous ELL slabs ---
+    for b in plan.buckets:
+        lo = 1 if b.deg == 1 else b.deg // 2 + 1
+        rows = b.rows[b.rows >= 0]
+        assert ((deg[rows] >= lo) & (deg[rows] <= b.deg)).all(), (
+            f"bucket d={b.deg} holds rows outside ({lo}, {b.deg}]"
+        )
+        # each row owns exactly deg[row] real slots of its d-slot stride
+        slab = (b.eids < e).reshape(-1, b.deg)
+        np.testing.assert_array_equal(slab.sum(axis=1)[: rows.size], deg[rows])
+        assert not slab[rows.size:].any()            # padding rows: no real slots
+        assert b.rows.size % b.rows_per_tile == 0    # tile-aligned
+
+    # --- (c) HD metadata: exactly one is_first per row, chunks contiguous ---
+    if plan.hd is not None:
+        assert (deg[plan.hd.rows] > e_t).all()
+        meta = plan.hd.chunk_meta
+        for slot, r in enumerate(plan.hd.rows):
+            idx = np.where(meta[:, 0] == slot)[0]
+            assert idx.size == -(-deg[r] // e_t)     # ceil(deg / e_t) chunks
+            assert idx.size and meta[idx, 1].sum() == 1
+            assert meta[idx[0], 1] == 1              # first chunk initialises
+            np.testing.assert_array_equal(idx, np.arange(idx[0], idx[0] + idx.size))
+    if plan.buckets:
+        ld_rows = np.concatenate([b.rows[b.rows >= 0] for b in plan.buckets])
+        assert (deg[ld_rows] <= e_t).all()
+
+    # --- (d) padded slots <= 2x + tile rounding ---
+    slots = sum(b.eids.size for b in plan.buckets)
+    slots += plan.hd.eids.size if plan.hd is not None else 0
+    slack = sum(b.rows_per_tile * b.deg for b in plan.buckets)
+    if plan.hd is not None:
+        slack += len(plan.hd.rows) * e_t
+    assert slots <= 2 * e + slack, (
+        f"padding blew the pow-2 bound: {slots} slots for {e} edges "
+        f"(+{slack} tile slack)"
+    )
+    assert plan.padding_overhead() == pytest.approx(slots / max(e, 1))
+
+
+_CASES = [
+    # (n, e_t, hd_frac, scale, seed)
+    (2, 512, 0.0, 1, 0),
+    (40, 512, 0.0, 1, 1),
+    (100, 64, 0.05, 1, 2),        # HD rows just past a small threshold
+    (150, 8, 0.2, 1, 3),          # tiny e_t: nearly everything is HD
+    (64, 512, 0.0, 40, 4),        # deep LD buckets (deg up to ~500)
+    (33, 128, 0.1, 7, 5),
+    (120, 512, 0.02, 1, 6),
+    (5, 16, 0.5, 1, 7),
+]
+
+
+if HAVE_HYPOTHESIS:
+
+    @hypothesis.given(
+        n=st.integers(2, 150),
+        e_t=st.sampled_from([8, 64, 512]),
+        hd_frac=st.sampled_from([0.0, 0.05, 0.3]),
+        scale=st.sampled_from([1, 7, 40]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_plan_invariants(n, e_t, hd_frac, scale, seed):
+        rng = np.random.default_rng(seed)
+        src, dst = graph_from_degrees(rng, n, e_t, hd_frac, scale)
+        check_plan_invariants(src, dst, n, e_t)
+
+else:
+
+    @pytest.mark.parametrize("n,e_t,hd_frac,scale,seed", _CASES)
+    def test_plan_invariants(n, e_t, hd_frac, scale, seed):
+        rng = np.random.default_rng(seed)
+        src, dst = graph_from_degrees(rng, n, e_t, hd_frac, scale)
+        check_plan_invariants(src, dst, n, e_t)
+
+
+def test_empty_graph_plan():
+    plan = build_plan(np.zeros(0, np.int64), np.zeros(0, np.int64), 8)
+    assert plan.buckets == () and plan.hd is None
+    assert plan.padding_overhead() == 0.0

@@ -10,6 +10,8 @@ from repro.core import aig as A
 from repro.core import pipeline as P
 from repro.io import aiger
 from repro.service import VerificationService
+
+pytestmark = pytest.mark.slow  # trains a model + spins up services; full lane
 from repro.service.bucketing import BucketShape, WorkItem, pack_batch, unpack_predictions
 from repro.kernels import ops
 
@@ -151,6 +153,32 @@ def test_error_requests_are_isolated(trained_params):
         r_good = svc.result(good, timeout=300)
     assert r_bad.status == "error" and r_bad.error
     assert r_good.status != "error"
+
+
+def test_structure_keyed_runner_bounds_jit_cache():
+    """groot-backed runner drops its jit cache past max_structures, so a
+    stream of distinct structures cannot grow memory monotonically."""
+    import jax
+    from repro.core import gnn
+    from repro.service.scheduler import BucketRunner
+
+    params = gnn.init_params(gnn.GNNConfig(hidden=8, num_layers=1), jax.random.key(0))
+    runner = BucketRunner(params, backend="groot", max_structures=2)
+    rng = np.random.default_rng(0)
+    for i in range(4):  # 4 distinct structures through a cap of 2
+        n, e = 32, 64
+        batch = {
+            "x": rng.standard_normal((n, 4)).astype(np.float32),
+            "edge_src": rng.integers(0, n, e).astype(np.int32),
+            "edge_dst": rng.integers(0, n, e).astype(np.int32),
+            "edge_inv": np.zeros(e, bool),
+            "edge_slot": np.zeros(e, np.uint8),
+            "num_nodes": n,
+        }
+        pred = runner(batch)
+        assert pred.shape == (n,)
+    assert runner.jit_cache_clears >= 1
+    assert len(runner._structures_seen) <= 2
 
 
 def test_poll_is_nonblocking_and_unknown_ticket_raises(trained_params):

@@ -10,6 +10,8 @@ import numpy as np
 import pytest
 
 from repro.core import aig as A
+
+pytestmark = pytest.mark.slow  # trains models; full-lane only
 from repro.core import gnn, pipeline as P
 from repro.core.features import groot_features, gamora_features
 from repro.core.labels import structural_detect
