@@ -1,0 +1,186 @@
+"""Partitioned streaming executor vs full-graph inference (repro.exec).
+
+Three tables, mirroring the paper's scaling story:
+
+  * ``partitioned_vs_k`` — full graph vs sequential per-partition loop vs
+    streaming executor across k: modeled peak device memory, wall time,
+    compile count (the executor compiles per BUCKET; the loop per
+    subgraph shape).
+  * ``regrow_accuracy`` — re-growth on/off core accuracy vs the
+    full-graph run (paper Fig. 6's solid vs dashed lines).
+  * ``scaling_headline`` — the acceptance row: a 256-bit CSA (~530k
+    nodes) at k=16 must stream below 50% of the full-graph modeled
+    memory with regrow=True accuracy within 0.1% of full-graph.
+
+    PYTHONPATH=src python -m benchmarks.bench_partitioned [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import print_table, save_table, trained_params
+from repro.core import aig as A
+from repro.core import gnn
+from repro.core import pipeline as P
+from repro.core.features import groot_features
+from repro.core.partition import PARTITIONERS
+from repro.core.regrowth import extract_partitions
+from repro.exec import StreamingExecutor, build_partition_plan
+
+CAPACITY = 2
+
+
+def _design(bits: int):
+    d = A.csa_multiplier(bits)
+    return d, d.to_edge_graph(), groot_features(d)
+
+
+def bench_vs_k(params, bits: int, ks: list[int]) -> list[dict]:
+    d, g, feats = _design(bits)
+    cfg = gnn.GNNConfig()
+    full_mem = P.memory_model_bytes(g.num_nodes, g.num_edges, cfg)
+
+    t0 = time.perf_counter()
+    pred_full = gnn.predict(params, g, feats, backend="ref")
+    t_full = time.perf_counter() - t0
+    acc_full = gnn.accuracy(pred_full, d.label)
+    rows = [{
+        "mode": "full", "k": 1, "peak_mem_mb": full_mem / 1e6,
+        "mem_vs_full": 1.0, "runtime_s": t_full, "compiles": 1,
+        "core_acc": acc_full,
+    }]
+    for k in ks:
+        plan = build_partition_plan(g, k, partitioner="multilevel", seed=0)
+        subs = list(plan.subgraphs)
+
+        t0 = time.perf_counter()
+        pred_loop = gnn.predict_partitioned_loop(
+            params, subs, feats, g.num_nodes, "ref"
+        )
+        t_loop = time.perf_counter() - t0
+        peak_loop = max(
+            P.memory_model_bytes(sg.num_nodes, sg.num_edges, cfg) for sg in subs
+        )
+        rows.append({
+            "mode": "loop", "k": k, "peak_mem_mb": peak_loop / 1e6,
+            "mem_vs_full": peak_loop / full_mem, "runtime_s": t_loop,
+            "compiles": len(subs), "core_acc": gnn.accuracy(pred_loop, d.label),
+        })
+
+        ex = StreamingExecutor(params, "ref", capacity=CAPACITY, prefetch=1)
+        t0 = time.perf_counter()
+        pred_stream = ex.run_plan(plan, feats)
+        t_stream = time.perf_counter() - t0
+        peak_stream = plan.peak_batch_memory_bytes(cfg, CAPACITY)
+        assert (pred_stream == pred_loop).all(), "stream/loop divergence"
+        rows.append({
+            "mode": f"stream(cap={CAPACITY})", "k": k,
+            "peak_mem_mb": peak_stream / 1e6,
+            "mem_vs_full": peak_stream / full_mem, "runtime_s": t_stream,
+            "compiles": ex.stats.compiles,
+            "core_acc": gnn.accuracy(pred_stream, d.label),
+        })
+        assert ex.stats.compiles <= plan.num_buckets, "compile probe regression"
+    return rows
+
+
+def bench_regrow(params, bits_grid: list[int], k: int) -> list[dict]:
+    """Fig. 6 style: no re-growth vs 1-hop (Algorithm 1) vs 2-hop."""
+    rows = []
+    for bits in bits_grid:
+        d, g, feats = _design(bits)
+        acc_full = gnn.accuracy(gnn.predict(params, g, feats, "ref"), d.label)
+        part = PARTITIONERS["multilevel"](g, k, seed=0)
+        accs = {}
+        for label, regrow, hops in (
+            ("noregrow", False, 1), ("regrow1", True, 1), ("regrow2", True, 2)
+        ):
+            subs = extract_partitions(g, part, regrow=regrow, hops=hops)
+            pred = gnn.predict_partitioned(params, subs, feats, g.num_nodes, "ref")
+            accs[label] = gnn.accuracy(pred, d.label)
+        rows.append({
+            "bits": bits, "k": k, "acc_full": acc_full,
+            "acc_regrow1": accs["regrow1"], "acc_regrow2": accs["regrow2"],
+            "acc_noregrow": accs["noregrow"],
+            "regrow1_gap": acc_full - accs["regrow1"],
+            "regrow2_gap": acc_full - accs["regrow2"],
+            "noregrow_gap": acc_full - accs["noregrow"],
+        })
+    return rows
+
+
+def bench_scaling_headline(params, bits: int = 256, k: int = 16) -> list[dict]:
+    """Acceptance row: 2-hop re-growth holds accuracy within 0.1% of the
+    full graph while the packed stream stays under half its memory."""
+    d, g, feats = _design(bits)
+    cfg = gnn.GNNConfig()
+    full_mem = P.memory_model_bytes(g.num_nodes, g.num_edges, cfg)
+
+    t0 = time.perf_counter()
+    acc_full = gnn.accuracy(gnn.predict(params, g, feats, "ref"), d.label)
+    t_full = time.perf_counter() - t0
+
+    plan = build_partition_plan(g, k, hops=2, partitioner="multilevel", seed=0)
+    ex = StreamingExecutor(params, "ref", capacity=CAPACITY, prefetch=1)
+    t0 = time.perf_counter()
+    pred = ex.run_plan(plan, feats)
+    t_stream = time.perf_counter() - t0
+    acc_stream = gnn.accuracy(pred, d.label)
+    peak = plan.peak_batch_memory_bytes(cfg, CAPACITY)
+
+    row = {
+        "bits": bits, "k": k, "nodes": g.num_nodes,
+        "full_mem_mb": full_mem / 1e6, "stream_peak_mb": peak / 1e6,
+        "mem_vs_full": peak / full_mem,
+        "acc_full": acc_full, "acc_stream": acc_stream,
+        "acc_delta": abs(acc_full - acc_stream),
+        "full_runtime_s": t_full, "stream_runtime_s": t_stream,
+        "compiles": ex.stats.compiles, "num_buckets": plan.num_buckets,
+        "bytes_h2d_mb": ex.stats.bytes_h2d / 1e6,
+    }
+    assert row["mem_vs_full"] < 0.5, (
+        f"acceptance: streamed peak {row['mem_vs_full']:.1%} of full-graph "
+        "memory (must be < 50%)"
+    )
+    assert row["acc_delta"] <= 1e-3, (
+        f"acceptance: regrow=True accuracy delta {row['acc_delta']:.4%} "
+        "(must be within 0.1% of full-graph)"
+    )
+    assert ex.stats.compiles <= plan.num_buckets
+    return [row]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--headline-bits", type=int, default=256)
+    args = ap.parse_args(argv)
+
+    params = trained_params("csa", 8)
+
+    bits = 16 if args.quick else 32
+    ks = [2, 4, 8] if args.quick else [2, 4, 8, 16]
+    rows = bench_vs_k(params, bits, ks)
+    print_table(f"full vs partitioned (csa {bits}b, ref backend)", rows)
+    save_table("partitioned_vs_k", rows)
+
+    grid = [10, 12] if args.quick else [10, 12, 14, 16]
+    rows = bench_regrow(params, grid, k=4)
+    print_table("re-growth accuracy recovery (Fig. 6 style, k=4)", rows)
+    save_table("regrow_accuracy", rows)
+
+    rows = bench_scaling_headline(params, args.headline_bits, k=16)
+    print_table(f"scaling headline (csa {args.headline_bits}b @ k=16)", rows)
+    save_table("scaling_headline", rows)
+    r = rows[0]
+    print(
+        f"\n{r['nodes']} nodes: streamed peak {r['stream_peak_mb']:.0f} MB "
+        f"= {r['mem_vs_full']:.1%} of full-graph {r['full_mem_mb']:.0f} MB; "
+        f"accuracy delta {r['acc_delta']:.4%} (regrow=True); "
+        f"{r['compiles']} compiles for {r['num_buckets']} buckets"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -27,11 +27,24 @@ def timer(fn, *args, repeats: int = 3, **kw):
     return best, out
 
 
+#: tables saved since the last ``drain_tables`` call — the per-suite JSON
+#: artifacts ``benchmarks.run --json`` folds into its BENCH_<suite>.json
+TABLES: dict[str, list] = {}
+
+
 def save_table(name: str, rows: list):
     ART.mkdir(parents=True, exist_ok=True)
     path = ART / f"{name}.json"
     path.write_text(json.dumps(rows, indent=1))
+    TABLES[name] = rows
     return path
+
+
+def drain_tables() -> dict[str, list]:
+    """Return and clear the tables saved since the last drain."""
+    out = dict(TABLES)
+    TABLES.clear()
+    return out
 
 
 def print_table(title: str, rows: list):

@@ -1,8 +1,14 @@
 """Benchmark orchestrator: one suite per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json]
 
 Default is the quick pass (CI-sized); --full reproduces the wider grids.
+``--json`` additionally writes one ``BENCH_<suite>.json`` per suite under
+``experiments/bench/`` — suite runtime, every table the suite saved
+(rows carry the peak-memory model / compile-count columns), and the
+process-wide plan-cache compile counters — so the bench trajectory
+accumulates machine-readable points run over run.
+
 The multi-pod dry-run + roofline tables are separate entry points
 (python -m repro.launch.dryrun / python -m repro.roofline.report) since
 they re-initialise jax with 512 host devices.
@@ -10,6 +16,7 @@ they re-initialise jax with 512 host devices.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -17,6 +24,8 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="write experiments/bench/BENCH_<suite>.json per suite")
     args = ap.parse_args(argv)
     quick = [] if args.full else ["--quick"]
 
@@ -25,29 +34,58 @@ def main(argv=None):
         bench_features,
         bench_grouped,
         bench_memory,
+        bench_partitioned,
         bench_service,
         bench_spmm,
         bench_verification,
     )
+    from benchmarks import common
+    from repro.kernels.plan_cache import PLAN_CACHE
 
     t0 = time.time()
     suites = [
-        ("accuracy (Fig. 6/7)", bench_accuracy.main),
-        ("memory (Fig. 8 / Table II)", bench_memory.main),
-        ("spmm kernels (Fig. 9)", bench_spmm.main),
-        ("grouped multi-polarity spmm (PR 2)", bench_grouped.main),
-        ("verification runtime (Fig. 10)", bench_verification.main),
-        ("feature ablation (§III-B)", bench_features.main),
-        ("verification service (repro.service)", bench_service.main),
+        ("accuracy", "accuracy (Fig. 6/7)", bench_accuracy.main),
+        ("memory", "memory (Fig. 8 / Table II)", bench_memory.main),
+        ("spmm", "spmm kernels (Fig. 9)", bench_spmm.main),
+        ("grouped", "grouped multi-polarity spmm (PR 2)", bench_grouped.main),
+        ("verification", "verification runtime (Fig. 10)", bench_verification.main),
+        ("features", "feature ablation (§III-B)", bench_features.main),
+        ("service", "verification service (repro.service)", bench_service.main),
+        ("partitioned", "partitioned streaming executor (repro.exec)",
+         bench_partitioned.main),
     ]
     failed = []
-    for name, fn in suites:
+    for key, name, fn in suites:
         print(f"\n#### {name} ####", flush=True)
+        common.drain_tables()
+        pc0 = PLAN_CACHE.snapshot()
+        t_suite = time.time()
+        err = None
         try:
             fn(quick)
         except Exception as e:  # noqa: BLE001
-            failed.append((name, repr(e)))
+            err = repr(e)
+            failed.append((name, err))
             print(f"[FAIL] {name}: {e}")
+        if args.json:
+            pc1 = PLAN_CACHE.snapshot()
+            common.ART.mkdir(parents=True, exist_ok=True)
+            payload = {
+                "suite": key,
+                "title": name,
+                "ok": err is None,
+                "error": err,
+                "runtime_s": time.time() - t_suite,
+                "quick": bool(quick),
+                "plan_cache": {
+                    "builds": pc1.builds - pc0.builds,
+                    "hits": pc1.hits - pc0.hits,
+                },
+                "tables": common.drain_tables(),
+            }
+            path = common.ART / f"BENCH_{key}.json"
+            path.write_text(json.dumps(payload, indent=1))
+            print(f"[json] wrote {path}")
     print(f"\nbenchmarks done in {time.time()-t0:.1f}s")
     if failed:
         for name, err in failed:

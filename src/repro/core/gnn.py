@@ -311,12 +311,46 @@ def predict_partitioned(
     features: np.ndarray,
     num_nodes: int,
     backend: str = "ref",
+    *,
+    streaming: bool = True,
+    capacity: int = 2,
+    prefetch: int = 1,
 ) -> np.ndarray:
     """Per-partition inference; core-node predictions only (paper's flow).
 
     Each subgraph is an independent device-sized problem — this is the
     memory-bounding property that lets a 1024-bit multiplier run on one
-    accelerator.
+    accelerator.  By default the partitions stream through the
+    ``repro.exec`` executor: same-bucket subgraphs are packed ``capacity``
+    per padded launch and the next batch's features are staged while the
+    device runs the current one.  ``streaming=False`` keeps the sequential
+    per-subgraph loop (one jit signature per subgraph shape) — bit-exact
+    with the streamed path on core rows; parity tests pin that down.
+    """
+    if streaming:
+        from repro.exec.stream import stream_predict_partitioned
+
+        return stream_predict_partitioned(
+            params, subgraphs, features, num_nodes, backend,
+            capacity=capacity, prefetch=prefetch,
+        )
+    return predict_partitioned_loop(
+        params, subgraphs, features, num_nodes, backend
+    )
+
+
+def predict_partitioned_loop(
+    params,
+    subgraphs: list[Subgraph],
+    features: np.ndarray,
+    num_nodes: int,
+    backend: str = "ref",
+) -> np.ndarray:
+    """Sequential reference: one unpadded device call per subgraph.
+
+    Kept as the bit-exactness oracle for the streaming executor and as the
+    baseline ``benchmarks/bench_partitioned.py`` measures against (it
+    recompiles per subgraph shape and staging never overlaps the device).
     """
     out = np.zeros(num_nodes, dtype=np.int64)
     for sg in subgraphs:

@@ -30,9 +30,16 @@ def bfs_stripe_partition(graph: EdgeGraph, k: int) -> np.ndarray:
 
     AIG builders emit nodes in topological order, so equal stripes of the
     node range are already BFS-like level stripes with good locality.
+
+    ``k`` is clamped to ``[1, num_nodes]`` so every emitted part id names a
+    non-empty stripe — downstream consumers (``extract_partitions``, the
+    streaming executor) never see an empty or out-of-range partition.
     """
     n = graph.num_nodes
-    return np.minimum((np.arange(n) * k) // max(n, 1), k - 1).astype(np.int32)
+    if n == 0:
+        return np.zeros(0, dtype=np.int32)
+    k = max(1, min(k, n))
+    return ((np.arange(n) * k) // n).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -100,15 +107,21 @@ def _greedy_grow(n, src, dst, node_w, k, rng):
     perm = rng.permutation(n)
     pi = 0
     for p in range(k):
-        # seed: first unassigned node
-        while pi < n and part[perm[pi]] >= 0:
-            pi += 1
-        if pi >= n:
-            break
-        frontier = [perm[pi]]
         grown = 0.0
         limit = target if p < k - 1 else np.inf
-        while frontier and grown < limit:
+        frontier: list = []
+        while grown < limit:
+            if not frontier:
+                # (re)seed: a region whose frontier died (disconnected
+                # component, or fully surrounded by assigned nodes) keeps
+                # growing from the next unassigned node — without this,
+                # starved regions stay tiny and the LAST partition swallows
+                # every leftover node (observed: 32% of a 530k-node graph).
+                while pi < n and part[perm[pi]] >= 0:
+                    pi += 1
+                if pi >= n:
+                    break
+                frontier = [int(perm[pi])]
             nxt = []
             for u in frontier:
                 if part[u] >= 0:
@@ -179,11 +192,35 @@ def _refine(n, src, dst, w, part, node_w, k, tol, passes=4):
 
 
 def multilevel_partition(
-    graph: EdgeGraph, k: int, tol: float = 0.1, seed: int = 0, coarse_target: int = 4096
+    graph: EdgeGraph,
+    k: int,
+    tol: float = 0.1,
+    seed: int = 0,
+    coarse_target: int | None = None,
 ) -> np.ndarray:
-    """METIS-style multilevel k-way partition."""
+    """METIS-style multilevel k-way partition.
+
+    ``k`` is clamped to ``[1, num_nodes]`` (a partition cannot be empty);
+    ``k == num_nodes`` degenerates to singletons without running the
+    coarsen/grow/refine machinery.
+
+    ``coarse_target`` (default ``max(4096, num_nodes // 8)``) bounds how
+    far coarsening runs.  Stopping earlier on large graphs costs a little
+    host time in the initial partition but measurably improves the cut —
+    on a 530k-node CSA-256 AIG, n//8 vs a flat 4096 shrinks the 2-hop
+    re-grown worst partition ~15% (the margin that keeps a k=16 stream
+    under half the full-graph memory model).
+    """
+    n0 = graph.num_nodes
+    if n0 == 0:
+        return np.zeros(0, dtype=np.int32)
+    if coarse_target is None:
+        coarse_target = max(4096, n0 // 8)
+    k = max(1, min(k, n0))
     if k <= 1:
-        return np.zeros(graph.num_nodes, dtype=np.int32)
+        return np.zeros(n0, dtype=np.int32)
+    if k == n0:
+        return np.arange(n0, dtype=np.int32)
     rng = np.random.default_rng(seed)
     levels = []
     n = graph.num_nodes

@@ -46,10 +46,18 @@ class PipelineConfig:
     batch: int = 1
     num_partitions: int = 1
     regrow: bool = True
+    regrow_hops: int = 1          # re-growth depth (iterated Algorithm 1);
+                                  # >= gnn.num_layers -> partitioned == full
     partitioner: str = "multilevel"
     gnn: gnn.GNNConfig = dataclasses.field(default_factory=gnn.GNNConfig)
     aggregate: str = "ref"   # "ref" | "groot" (Pallas kernel) | "onehot"
     seed: int = 0
+    # streaming-executor knobs (repro.exec).  ``memory_budget_bytes`` set
+    # and num_partitions <= 1: prepare() derives the partition count from
+    # the device budget via choose_k (the "fit this accelerator" mode).
+    memory_budget_bytes: Optional[int] = None
+    stream_capacity: int = 2      # same-bucket partitions packed per launch
+    stream_prefetch: int = 1      # packed batches staged ahead of the device
 
 
 @dataclasses.dataclass
@@ -70,6 +78,11 @@ class PipelineResult:
     # other thread (e.g. a live VerificationService) runs inference
     # concurrently.
     plan_cache: dict = dataclasses.field(default_factory=dict)
+    # streaming-executor probes for partitioned runs: compiles, launches,
+    # bytes_h2d, pack/device/wall seconds, peak_packed_memory_bytes (the
+    # modeled bytes of the largest capacity-slot launch — the quantity
+    # that must fit the device budget), chosen_k.
+    exec_stats: dict = dataclasses.field(default_factory=dict)
 
 
 def memory_model_bytes(
@@ -117,6 +130,12 @@ class PreparedDesign:
     def num_edges(self) -> int:
         return self.graph.num_edges
 
+    @property
+    def num_partitions(self) -> int:
+        """Effective partition count (budget-driven prepare may exceed
+        ``cfg.num_partitions``)."""
+        return len(self.subgraphs) if self.subgraphs else 1
+
     def memory_bytes(self) -> tuple[int, int]:
         """(unpartitioned, peak-over-partitions) device bytes."""
         full = memory_model_bytes(self.num_nodes, self.num_edges, self.cfg.gnn)
@@ -151,12 +170,44 @@ def prepare(cfg: PipelineConfig, design=None) -> PreparedDesign:
     t_gen = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    if cfg.num_partitions <= 1:
+    k = cfg.num_partitions
+    budgeted = k <= 1 and cfg.memory_budget_bytes is not None
+    if budgeted:
+        from repro.exec.plan import HALO_FRAC, choose_k
+
+        # halo grows with re-growth depth; scale the planning margin so
+        # deep-hop runs are not fitted with the 1-hop estimate
+        k = choose_k(
+            g.num_nodes, g.num_edges, cfg.gnn, cfg.memory_budget_bytes,
+            capacity=cfg.stream_capacity,
+            halo_frac=HALO_FRAC * max(1, cfg.regrow_hops if cfg.regrow else 1),
+        )
+
+    def _cut(k):
+        part = PARTITIONERS[cfg.partitioner](g, k, seed=cfg.seed)
+        return part, extract_partitions(
+            g, part, regrow=cfg.regrow, hops=cfg.regrow_hops
+        )
+
+    if k <= 1:
         subs, bfrac, t_part = None, 0.0, 0.0
     else:
-        part = PARTITIONERS[cfg.partitioner](g, cfg.num_partitions, seed=cfg.seed)
+        part, subs = _cut(k)
+        if budgeted and subs:
+            # the estimate can undershoot real halo growth: validate the
+            # BUILT plan's packed peak and re-split finer until it fits
+            from repro.exec.plan import plan_from_subgraphs
+
+            while k < g.num_nodes and plan_from_subgraphs(
+                subs, g.num_nodes
+            ).peak_batch_memory_bytes(
+                cfg.gnn, cfg.stream_capacity
+            ) > cfg.memory_budget_bytes:
+                k *= 2
+                part, subs = _cut(k)
         bfrac = boundary_edge_fraction(g, part)
-        subs = extract_partitions(g, part, regrow=cfg.regrow)
+        if not subs:  # empty graph: fall back to the unpartitioned path
+            subs = None
         t_part = time.perf_counter() - t0
     return PreparedDesign(
         cfg=cfg,
@@ -171,13 +222,59 @@ def prepare(cfg: PipelineConfig, design=None) -> PreparedDesign:
 
 
 def infer(params, prep: PreparedDesign, *, backend: Optional[str] = None) -> np.ndarray:
-    """Stage 2 (device): per-node class predictions over the full graph."""
-    backend = backend or prep.cfg.aggregate
+    """Stage 2 (device): per-node class predictions over the full graph.
+
+    Partitioned designs stream (prepare -> plan -> stream -> scatter);
+    :func:`infer_streaming` exposes the executor's probe counters too.
+    """
     if prep.subgraphs is None:
+        backend = backend or prep.cfg.aggregate
         return gnn.predict(params, prep.graph, prep.feats, backend=backend)
-    return gnn.predict_partitioned(
-        params, prep.subgraphs, prep.feats, prep.num_nodes, backend=backend
+    pred, _ = infer_streaming(params, prep, backend=backend)
+    return pred
+
+
+def infer_streaming(
+    params,
+    prep: PreparedDesign,
+    *,
+    backend: Optional[str] = None,
+    executor=None,
+) -> tuple[np.ndarray, dict]:
+    """Partitioned inference through the streaming executor.
+
+    Returns ``(pred, exec_stats)`` where ``exec_stats`` carries the
+    executor probes (compiles, launches, bytes_h2d, pack/device/wall
+    seconds) plus ``peak_packed_memory_bytes`` — the modeled device bytes
+    of the largest packed launch — and ``chosen_k``.
+    """
+    from repro.exec.plan import plan_from_subgraphs
+    from repro.exec.stream import shared_executor
+
+    assert prep.subgraphs, "infer_streaming needs a partitioned PreparedDesign"
+    backend = backend or prep.cfg.aggregate
+    cfg = prep.cfg
+    if executor is None:
+        # reused per (params, backend): repeated partitioned runs hit the
+        # same jit cache instead of retracing every bucket
+        executor = shared_executor(
+            params, backend, capacity=cfg.stream_capacity,
+            prefetch=cfg.stream_prefetch,
+        )
+    plan = plan_from_subgraphs(
+        list(prep.subgraphs), prep.num_nodes, num_edges=prep.num_edges,
+        regrow=cfg.regrow, partitioner=cfg.partitioner, seed=cfg.seed,
+        min_nodes=executor.min_nodes, min_edges=executor.min_edges,
     )
+    before = dataclasses.replace(executor.stats)
+    pred = executor.run_plan(plan, prep.feats)
+    stats = dataclasses.asdict(executor.stats.delta(before))
+    stats["peak_packed_memory_bytes"] = plan.peak_batch_memory_bytes(
+        cfg.gnn, executor.capacity
+    )
+    stats["num_buckets"] = plan.num_buckets
+    stats["chosen_k"] = prep.num_partitions
+    return pred, stats
 
 
 def verify_prepared(
@@ -209,7 +306,10 @@ def run_pipeline(
     prep = prepare(cfg)
     t0 = time.perf_counter()
     pc_before = PLAN_CACHE.snapshot()
-    pred = infer(params, prep)
+    if prep.subgraphs is None:
+        pred, exec_stats = infer(params, prep), {}
+    else:
+        pred, exec_stats = infer_streaming(params, prep)
     pc_after = PLAN_CACHE.snapshot()
     t_inf = time.perf_counter() - t0
     mem_full, peak_mem = prep.memory_bytes()
@@ -229,6 +329,7 @@ def run_pipeline(
             "builds": pc_after.builds - pc_before.builds,
             "hits": pc_after.hits - pc_before.hits,
         },
+        exec_stats=exec_stats,
     )
 
 

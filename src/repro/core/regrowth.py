@@ -50,14 +50,32 @@ class Subgraph:
 
 
 def extract_partitions(
-    graph: EdgeGraph, part: np.ndarray, regrow: bool = True
+    graph: EdgeGraph, part: np.ndarray, regrow: bool = True, hops: int = 1
 ) -> list[Subgraph]:
     """Algorithm 1, vectorized over all partitions at once.
 
     Without ``regrow``: induced subgraphs E[S_p] only (what plain METIS
     partitioning gives you — the dashed lines of paper Fig. 6).
+
+    ``hops`` iterates Algorithm 1's boundary growth: ``hops=1`` is the
+    paper's B_p/C_p exactly; ``hops=h`` augments with the h-hop
+    neighbourhood A_h = N^h(S_p) and every edge internal to it, which makes
+    an L-layer GNN's core predictions *bit-exact* with the full-graph run
+    once ``hops >= L`` (each core node then sees its complete receptive
+    field, including the degree norms of every node whose representation it
+    consumes).  Deeper halos trade memory for accuracy — the streaming
+    executor's knob for the paper Fig. 6 recovery curve.
+
+    Part ids are compacted first (``np.unique``), so sparse or gappy
+    labelings — e.g. a partitioner asked for more parts than nodes — yield
+    one ``Subgraph`` per *non-empty* partition and never an empty or
+    out-of-range entry.  An empty graph yields an empty list.
     """
-    k = int(part.max()) + 1 if part.size else 1
+    if part.size == 0:
+        return []
+    # compact to consecutive ids 0..k-1 over non-empty partitions only
+    _, part = np.unique(part, return_inverse=True)
+    k = int(part.max()) + 1
     src, dst = graph.edge_src, graph.edge_dst
     ps, pd = part[src], part[dst]
     inv = graph.edge_inv
@@ -69,7 +87,19 @@ def extract_partitions(
         core_ids = np.where(core_mask)[0]
         e_int = internal & (ps == p)
 
-        if regrow:
+        if regrow and hops > 1:
+            # iterated re-growth: A = N^hops(S_p); keep E[A] (halo-halo
+            # edges included — they feed the halo representations the core
+            # consumes at depth > 1)
+            grown = core_mask.copy()
+            for _ in range(hops):
+                touch = grown[src] | grown[dst]
+                grown[src[touch]] = True
+                grown[dst[touch]] = True
+            keep = grown[src] & grown[dst]
+            halo_ids = np.where(grown & ~core_mask)[0]
+            local_ids = np.concatenate([core_ids, halo_ids])
+        elif regrow:
             # crossing edges C_p: exactly-one endpoint in S_p. (Any such
             # edge's other endpoint is 1-hop away, i.e. in B_p by Eq. 1.)
             cross = (ps == p) ^ (pd == p)

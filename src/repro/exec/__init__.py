@@ -1,0 +1,35 @@
+"""Partitioned streaming execution: run arbitrarily large AIGs through
+bucketed, plan-cached, double-buffered partition batches.
+
+    EdgeGraph ──▶ PartitionPlan (partition + re-growth + pow-2 buckets,
+               │   content-hash cached; choose_k picks k from a device
+               │   memory budget)
+               ├─▶ PackedBatch stream (capacity same-bucket subgraphs per
+               │   disjoint-union launch; features staged by the prefetch
+               │   thread)
+               └─▶ StreamingExecutor (one jitted padded forward per bucket;
+                   core predictions scattered back to global rows)
+
+The layer every multi-device / sharding PR builds on: a design that does
+not fit the device is expressed as a stream of device-sized launches with
+a handful of compile units.
+"""
+from repro.exec.plan import (  # noqa: F401
+    PartitionPlan,
+    build_partition_plan,
+    choose_k,
+    choose_k_for_caps,
+    plan_from_subgraphs,
+)
+from repro.exec.packing import PackedBatch, pack_partitions  # noqa: F401
+from repro.exec.stream import (  # noqa: F401
+    StreamingExecutor,
+    StreamStats,
+    stream_predict_partitioned,
+)
+
+__all__ = [
+    "PartitionPlan", "build_partition_plan", "choose_k", "choose_k_for_caps",
+    "plan_from_subgraphs", "PackedBatch", "pack_partitions",
+    "StreamingExecutor", "StreamStats", "stream_predict_partitioned",
+]

@@ -74,6 +74,32 @@ class PlanCache:
                 self.stats.evictions += 1
             return value
 
+    def peek(self, key: Hashable) -> object | None:
+        """Lookup without building (counts as hit/miss).  Pair with
+        :meth:`add` for SLOW builders that must not run under the cache
+        lock (e.g. whole-design partitioning): peek, build outside, add."""
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.stats.hits += 1
+                return self._data[key]
+            self.stats.misses += 1
+            return None
+
+    def add(self, key: Hashable, value: object) -> object:
+        """Insert a value built outside the lock; an earlier racer's entry
+        wins (returns the canonical value, preserving same-object reuse)."""
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                return self._data[key]
+            self.stats.builds += 1
+            self._data[key] = value
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self.stats.evictions += 1
+            return value
+
     def clear(self) -> None:
         with self._lock:
             self._data.clear()

@@ -64,6 +64,28 @@ class WorkItem:
         return BucketShape(n_pad, e_pad)
 
 
+def item_from_subgraph(
+    req_id: int, part_index: int, sg, features: np.ndarray
+) -> WorkItem:
+    """One partition as a work item: gathers (stages) its feature rows.
+
+    The single Subgraph->WorkItem mapping shared by the service prepare
+    path and the streaming executor's packer — the staging contract
+    (float32, contiguous, halo rows included) lives here only.
+    """
+    return WorkItem(
+        req_id=req_id,
+        part_index=part_index,
+        feats=np.ascontiguousarray(features[sg.global_ids], dtype=np.float32),
+        edge_src=sg.edge_src,
+        edge_dst=sg.edge_dst,
+        edge_inv=sg.edge_inv,
+        edge_slot=sg.edge_slot,
+        num_core=sg.num_core,
+        global_ids=sg.global_ids,
+    )
+
+
 def items_from_prepared(req_id: int, prep: PreparedDesign) -> list[WorkItem]:
     """Split a prepared request into schedulable work items."""
     if prep.subgraphs is None:
@@ -82,17 +104,7 @@ def items_from_prepared(req_id: int, prep: PreparedDesign) -> list[WorkItem]:
             )
         ]
     return [
-        WorkItem(
-            req_id=req_id,
-            part_index=i,
-            feats=prep.feats[sg.global_ids],
-            edge_src=sg.edge_src,
-            edge_dst=sg.edge_dst,
-            edge_inv=sg.edge_inv,
-            edge_slot=sg.edge_slot,
-            num_core=sg.num_core,
-            global_ids=sg.global_ids,
-        )
+        item_from_subgraph(req_id, i, sg, prep.feats)
         for i, sg in enumerate(prep.subgraphs)
     ]
 

@@ -122,10 +122,19 @@ class SchedulerStats:
     run_count: int
     buckets: list[BucketShape]
     items_run: int
+    streamed_items: int = 0
 
 
 class ShapeBucketScheduler:
-    """Groups work items into shape buckets and runs them batched."""
+    """Groups work items into shape buckets and runs them batched.
+
+    With ``max_bucket_nodes`` set, an item too large for the largest
+    allowed bucket is not rejected: it is auto-routed through the
+    partitioned streaming executor (``repro.exec``) — partitioned with
+    re-growth into device-sized pieces that themselves land in (capped)
+    buckets and stream through the SAME :class:`BucketRunner`, so the
+    compile-count probe keeps covering them.
+    """
 
     def __init__(
         self,
@@ -136,29 +145,94 @@ class ShapeBucketScheduler:
         min_nodes: int = 64,
         min_edges: int = 128,
         max_structures: int = 64,
+        max_bucket_nodes: int | None = None,
+        max_bucket_edges: int | None = None,
+        stream_capacity: int = 2,
+        stream_partitioner: str = "multilevel",
     ):
         assert capacity >= 1
         self.runner = BucketRunner(params, backend, max_structures=max_structures)
         self.capacity = capacity
         self.min_nodes = min_nodes
         self.min_edges = min_edges
+        self.max_bucket_nodes = max_bucket_nodes
+        self.max_bucket_edges = max_bucket_edges
+        self.stream_capacity = stream_capacity
+        self.stream_partitioner = stream_partitioner
+        self._executor = None         # lazy; shares self.runner
         self._buckets_seen: set[BucketShape] = set()
         self._items_run = 0
+        self._streamed_items = 0
 
     def bucket_of(self, item: WorkItem) -> BucketShape:
         return item.bucket(min_nodes=self.min_nodes, min_edges=self.min_edges)
+
+    def _oversized(self, shape: BucketShape) -> bool:
+        if self.max_bucket_nodes is not None and shape.n_pad > self.max_bucket_nodes:
+            return True
+        if self.max_bucket_edges is not None and shape.e_pad > self.max_bucket_edges:
+            return True
+        return False
+
+    def _stream_item(self, item: WorkItem) -> np.ndarray:
+        """Run one oversized item through the partitioned streaming
+        executor; returns predictions for every item row (its internal
+        partitions' cores tile the item graph)."""
+        from repro.core.graph import EdgeGraph
+        from repro.exec.plan import choose_k_for_caps
+        from repro.exec.stream import StreamingExecutor
+
+        if self._executor is None:
+            self._executor = StreamingExecutor(
+                runner=self.runner,
+                capacity=self.stream_capacity,
+                min_nodes=self.min_nodes,
+                min_edges=self.min_edges,
+            )
+        g = EdgeGraph(
+            item.num_nodes, item.edge_src, item.edge_dst,
+            item.edge_inv, item.edge_slot,
+        )
+        k = choose_k_for_caps(
+            g.num_nodes, g.num_edges,
+            self.max_bucket_nodes or g.num_nodes + 1,
+            self.max_bucket_edges,
+            min_nodes=self.min_nodes, min_edges=self.min_edges,
+        )
+        # choose_k_for_caps estimates the halo; actual re-growth can
+        # overshoot it, so verify the BUILT plan's buckets and re-split
+        # finer until every launch really fits the configured ceiling
+        plan = self._executor.plan_graph(
+            g, k, regrow=True, partitioner=self.stream_partitioner, seed=0
+        )
+        while k < g.num_nodes and any(
+            self._oversized(shape) for shape in plan.buckets
+        ):
+            k *= 2
+            plan = self._executor.plan_graph(
+                g, k, regrow=True, partitioner=self.stream_partitioner, seed=0
+            )
+        self._streamed_items += 1
+        pred = self._executor.run_plan(plan, item.feats)
+        self._buckets_seen.update(self._executor.buckets_seen)
+        return pred[: item.num_nodes]
 
     def run_items(self, items: list[WorkItem]) -> dict[tuple[int, int], np.ndarray]:
         """Run a set of items; returns (req_id, part_index) -> real-node preds.
 
         Items of the same bucket are packed ``capacity`` at a time, so a
         burst of same-shaped requests shares device calls as well as
-        compilations.
+        compilations.  Oversized items stream through the executor.
         """
         by_bucket: dict[BucketShape, list[WorkItem]] = defaultdict(list)
-        for it in items:
-            by_bucket[self.bucket_of(it)].append(it)
         out: dict[tuple[int, int], np.ndarray] = {}
+        for it in items:
+            shape = self.bucket_of(it)
+            if self._oversized(shape):
+                out[(it.req_id, it.part_index)] = self._stream_item(it)
+                self._items_run += 1
+            else:
+                by_bucket[shape].append(it)
         for shape, group in by_bucket.items():
             self._buckets_seen.add(shape)
             for i in range(0, len(group), self.capacity):
@@ -175,4 +249,5 @@ class ShapeBucketScheduler:
             run_count=self.runner.run_count,
             buckets=sorted(self._buckets_seen, key=lambda b: (b.n_pad, b.e_pad)),
             items_run=self._items_run,
+            streamed_items=self._streamed_items,
         )

@@ -58,6 +58,12 @@ class ServiceConfig:
                                   # a wholesale cache clear (memory bound)
     min_nodes: int = 64           # bucket floor (nodes)
     min_edges: int = 128          # bucket floor (edges)
+    # bucket ceilings ("device size").  A request whose graph would need a
+    # larger bucket is NOT rejected: the scheduler partitions it (with
+    # re-growth) and streams it through the repro.exec executor.
+    max_bucket_nodes: Optional[int] = None
+    max_bucket_edges: Optional[int] = None
+    stream_capacity: int = 2      # partitions packed per streamed launch
     prepare_workers: int = 2
     cache_capacity: int = 1024
     max_batch_requests: int = 16  # requests drained per device-worker cycle
@@ -116,6 +122,9 @@ class VerificationService:
             min_nodes=config.min_nodes,
             min_edges=config.min_edges,
             max_structures=config.max_structures,
+            max_bucket_nodes=config.max_bucket_nodes,
+            max_bucket_edges=config.max_bucket_edges,
+            stream_capacity=config.stream_capacity,
         )
         self._pool = ThreadPoolExecutor(
             max_workers=config.prepare_workers, thread_name_prefix="svc-prepare"
@@ -224,6 +233,7 @@ class VerificationService:
             "device_calls": s.run_count,
             "buckets": [(b.n_pad, b.e_pad) for b in s.buckets],
             "items_run": s.items_run,
+            "streamed_items": s.streamed_items,
             # process-wide structural plan cache (groot* backends)
             "plan_cache": PLAN_CACHE.snapshot(),
         }
@@ -389,6 +399,9 @@ def main(argv=None):
     ap.add_argument("--partitions", type=int, default=1)
     ap.add_argument("--no-regrow", action="store_true")
     ap.add_argument("--capacity", type=int, default=2)
+    ap.add_argument("--max-bucket-nodes", type=int, default=None,
+                    help="bucket ceiling; larger designs stream through "
+                         "the partitioned executor instead of erroring")
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--train-bits", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=300)
@@ -403,6 +416,7 @@ def main(argv=None):
         regrow=not args.no_regrow,
         capacity=args.capacity,
         prepare_workers=args.workers,
+        max_bucket_nodes=args.max_bucket_nodes,
     )
     t0 = time.perf_counter()
     results = []
@@ -427,7 +441,7 @@ def main(argv=None):
     print(f"\nserved {len(results)} requests in {dt:.2f}s "
           f"({len(results) / dt:.1f} req/s incl. compile)")
     print(f"jit compiles: {s['compile_count']}  device calls: {s['device_calls']}  "
-          f"buckets: {s['buckets']}")
+          f"buckets: {s['buckets']}  streamed: {s['streamed_items']}")
     print(f"cache: {s['cache'].hits} hits / {s['cache'].misses} misses "
           f"(rate {s['cache'].hit_rate:.0%})")
 

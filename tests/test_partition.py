@@ -1,0 +1,143 @@
+"""Partitioner quality + degenerate-input contract (core/partition.py).
+
+The contract the streaming executor relies on: every part id emitted by a
+partitioner names a non-empty partition in range, for ANY (graph, k) —
+including k > num_nodes, k == 1 and empty graphs — and
+``extract_partitions`` never yields an empty or out-of-range subgraph.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import aig as A
+from repro.core.graph import EdgeGraph
+from repro.core.partition import (
+    PARTITIONERS,
+    bfs_stripe_partition,
+    edge_cut,
+    multilevel_partition,
+)
+from repro.core.regrowth import extract_partitions
+
+
+def _graph(fam="csa", bits=16):
+    return A.make_design(fam, bits).to_edge_graph()
+
+
+def _empty_graph():
+    return EdgeGraph(0, np.zeros(0, np.int32), np.zeros(0, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Quality
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fam,bits,k", [("csa", 16, 4), ("mapped", 16, 4),
+                                        ("booth", 16, 8)])
+def test_multilevel_balance_within_tol(fam, bits, k):
+    g = _graph(fam, bits)
+    part = multilevel_partition(g, k, tol=0.1, seed=0)
+    sizes = np.bincount(part, minlength=k)
+    assert sizes.min() > 0
+    # tol + slack for greedy-grow overshoot on heavy coarse nodes
+    assert sizes.max() <= 1.2 * g.num_nodes / k
+
+
+@pytest.mark.parametrize("k", [4, 8])
+def test_bfs_stripes_are_balanced_and_contiguous(k):
+    g = _graph()
+    part = bfs_stripe_partition(g, k)
+    sizes = np.bincount(part, minlength=k)
+    assert sizes.max() - sizes.min() <= 1          # equal stripes
+    assert (np.diff(part) >= 0).all()              # contiguous in node order
+
+
+@pytest.mark.parametrize("fam,bits", [("csa", 16), ("booth", 16), ("mapped", 16)])
+@pytest.mark.parametrize("k", [4, 8])
+def test_multilevel_cut_beats_bfs_stripes(fam, bits, k):
+    """Edge-cut sanity on the paper's Fig.-4-style AIG families: the
+    METIS-style partitioner must not lose to the O(N) stripe baseline."""
+    g = _graph(fam, bits)
+    cut_ml = edge_cut(g, multilevel_partition(g, k, seed=0))
+    cut_bfs = edge_cut(g, bfs_stripe_partition(g, k))
+    assert cut_ml <= cut_bfs
+
+
+@pytest.mark.parametrize("partitioner", ["multilevel", "bfs"])
+def test_partitioner_deterministic_under_fixed_seed(partitioner):
+    g = _graph()
+    a = PARTITIONERS[partitioner](g, 4, seed=3)
+    b = PARTITIONERS[partitioner](g, 4, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# Degenerate inputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("partitioner", ["multilevel", "bfs"])
+def test_k_larger_than_num_nodes(partitioner):
+    g = A.csa_multiplier(2).to_edge_graph()     # tiny graph
+    part = PARTITIONERS[partitioner](g, g.num_nodes + 100)
+    assert part.shape == (g.num_nodes,)
+    # every part id in range and every used partition non-empty
+    assert part.min() >= 0 and part.max() < g.num_nodes
+    sizes = np.bincount(part)
+    assert (sizes[np.unique(part)] > 0).all()
+    subs = extract_partitions(g, part, regrow=True)
+    assert 0 < len(subs) <= g.num_nodes
+    assert all(sg.num_core > 0 for sg in subs)
+
+
+@pytest.mark.parametrize("partitioner", ["multilevel", "bfs"])
+def test_k_equals_one_is_trivial(partitioner):
+    g = _graph(bits=8)
+    part = PARTITIONERS[partitioner](g, 1)
+    assert (part == 0).all()
+    subs = extract_partitions(g, part, regrow=True)
+    assert len(subs) == 1
+    assert subs[0].num_core == g.num_nodes and subs[0].num_halo == 0
+    assert subs[0].num_edges == g.num_edges
+
+
+@pytest.mark.parametrize("partitioner", ["multilevel", "bfs"])
+@pytest.mark.parametrize("k", [1, 4])
+def test_empty_graph(partitioner, k):
+    g = _empty_graph()
+    part = PARTITIONERS[partitioner](g, k)
+    assert part.shape == (0,) and part.dtype == np.int32
+    assert extract_partitions(g, part, regrow=True) == []
+
+
+def test_extract_partitions_compacts_gappy_part_ids():
+    """A sparse labeling (empty partition in the middle) yields one
+    subgraph per NON-empty partition — the executor can never be handed an
+    empty or out-of-range part."""
+    g = A.csa_multiplier(2).to_edge_graph()
+    n = g.num_nodes
+    part = np.full(n, 7, np.int32)
+    part[: n // 2] = 2                           # ids {2, 7}: gaps + offset
+    subs = extract_partitions(g, part, regrow=False)
+    assert len(subs) == 2
+    assert sorted(len(sg.global_ids) for sg in subs) == sorted(
+        [n // 2, n - n // 2]
+    )
+
+
+@pytest.mark.parametrize("regrow", [True, False])
+def test_extract_partitions_core_cover_is_exact(regrow):
+    """Core node sets tile the graph: every node is core of exactly one
+    subgraph (what makes the executor's scatter complete and unambiguous)."""
+    g = _graph(bits=8)
+    part = multilevel_partition(g, 4, seed=0)
+    subs = extract_partitions(g, part, regrow=regrow)
+    seen = np.zeros(g.num_nodes, dtype=np.int64)
+    for sg in subs:
+        np.add.at(seen, sg.global_ids[: sg.num_core], 1)
+        # local edge ids are always in range
+        if sg.num_edges:
+            assert sg.edge_src.min() >= 0 and sg.edge_src.max() < sg.num_nodes
+            assert sg.edge_dst.min() >= 0 and sg.edge_dst.max() < sg.num_nodes
+    assert (seen == 1).all()
