@@ -1,4 +1,4 @@
-"""Grouped multi-polarity SpMM vs per-group aggregation (PR 2 tentpole).
+"""Grouped multi-polarity SpMM vs per-group aggregation + hoisting traffic.
 
 Measures, per SAGE layer, what the grouped path removes from the hot
 path: the six independent slot x polarity aggregations (each re-gathering
@@ -6,13 +6,18 @@ the same edge stream and re-walking the bucket-kernel schedule) collapse
 to one grouped aggregation per direction.  Reported per configuration:
 
   * probe counts per layer — edge-stream gathers, bucket-kernel walks,
-    and individual pallas_call launches (trace-time counters in
-    ``repro.kernels.groot_spmm.PROBE``);
+    weight gathers, output scatters, and individual pallas_call launches
+    (trace-time counters in ``repro.kernels.groot_spmm.PROBE``);
   * forward wall-clock (this CPU container runs Pallas interpret=True,
     so wall-clock ranks dispatch/launch overhead, not TPU time — the
     probe counts are the hardware-portable signal);
   * plan-cache effect: plans/pairs built on the first vs a repeated
-    forward over the same structure.
+    forward over the same structure;
+  * **hoisting traffic** (``grouped_traffic`` table): modeled per-layer
+    HBM bytes before vs after the ForwardPlan hoisting
+    (``pipeline.layer_traffic_model_bytes`` fed the REAL plan slot and
+    segment counts), f32 and bf16 streams.  The acceptance row asserts
+    >= 25% per-layer reduction on csa-64 with the hoisted f32 path.
 
     PYTHONPATH=src python -m benchmarks.bench_grouped [--quick]
 """
@@ -28,7 +33,9 @@ import numpy as np
 from benchmarks.common import print_table, save_table
 from repro.core import aig as A
 from repro.core import gnn
+from repro.core.pipeline import layer_traffic_model_bytes
 from repro.kernels import ops
+from repro.kernels import plan_cache as PC
 from repro.kernels.groot_spmm import probe_snapshot, reset_probe
 from repro.kernels.plan_cache import PLAN_CACHE
 
@@ -61,7 +68,12 @@ def run(bits_list, backends, quick=False):
             # plans are a per-(graph, backend) property shared by both
             # modes; 0 means the structure was already cached this process
             plans_built = pc1.builds - pc0.builds
-            for mode, p in (("grouped", pair), ("per-group", ops.ungrouped(pair))):
+            modes = (
+                ("hoisted", pair),
+                ("pre-hoist", ops.unhoisted(pair)),
+                ("per-group", ops.ungrouped(pair)),
+            )
+            for mode, p in modes:
                 _forward_once(params, g, x, inv, slot, p)  # warmup dispatch
                 reset_probe()
                 t0 = time.perf_counter()
@@ -76,6 +88,8 @@ def run(bits_list, backends, quick=False):
                         "gathers/layer": probe["edge_stream_gathers"] / cfg.num_layers,
                         "walks/layer": probe["kernel_walks"] / cfg.num_layers,
                         "launches/layer": probe["pallas_calls"] / cfg.num_layers,
+                        "w_gathers/fwd": probe["weight_gathers"],
+                        "out_scatters": probe["output_scatters"],
                         "wall_s": round(dt, 3),
                         "plans_built": plans_built,
                         "edges": g.num_edges,
@@ -90,6 +104,48 @@ def run(bits_list, backends, quick=False):
     return rows
 
 
+def traffic_rows(bits_list, cfg: gnn.GNNConfig) -> list[dict]:
+    """Modeled per-layer HBM traffic before/after hoisting, from the REAL
+    plan slot/segment counts (host-side only: no forward is run, so the
+    csa-64 acceptance row stays cheap enough for --quick/CI)."""
+    rows = []
+    for bits in bits_list:
+        g = A.make_design("csa", bits).to_edge_graph()
+        # only the two SpmmPlans are needed (slot/segment counts) — no
+        # AggPair/ForwardPlan/jit closures for the model-only rows
+        in_plan = PC.cached_plan(g.edge_src, g.edge_dst, g.num_nodes)
+        out_plan = PC.cached_plan(g.edge_dst, g.edge_src, g.num_nodes)
+        kw = dict(
+            slots_in=in_plan.num_slots,
+            slots_out=out_plan.num_slots,
+            segments_in=in_plan.num_segments,
+            segments_out=out_plan.num_segments,
+        )
+        before = layer_traffic_model_bytes(
+            g.num_nodes, g.num_edges, cfg, hoisted=False, **kw
+        )
+        after = layer_traffic_model_bytes(
+            g.num_nodes, g.num_edges, cfg, hoisted=True, **kw
+        )
+        after_bf16 = layer_traffic_model_bytes(
+            g.num_nodes, g.num_edges, cfg, hoisted=True,
+            stream_dtype="bfloat16", **kw
+        )
+        rows.append(
+            {
+                "bits": bits,
+                "nodes": g.num_nodes,
+                "edges": g.num_edges,
+                "prehoist_mb": before / 1e6,
+                "hoisted_mb": after / 1e6,
+                "hoisted_bf16_mb": after_bf16 / 1e6,
+                "reduction_f32": 1.0 - after / before,
+                "reduction_bf16": 1.0 - after_bf16 / before,
+            }
+        )
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -100,7 +156,25 @@ def main(argv=None):
         rows = run([8, 16], ["groot", "groot_mxu", "groot_fused"], quick=False)
     print_table("grouped vs per-group SpMM (6 -> 2 per layer)", rows)
     save_table("grouped", rows)
-    return rows
+
+    # hoisting acceptance: >= 25% modeled per-layer traffic reduction on
+    # csa-64 with the hoisted f32 path (bf16 reported alongside)
+    cfg = gnn.GNNConfig()
+    trows = traffic_rows([8, 64] if args.quick else [8, 16, 64], cfg)
+    print_table("per-layer HBM traffic, pre-hoist vs ForwardPlan", trows)
+    save_table("grouped_traffic", trows)
+    r64 = next(r for r in trows if r["bits"] == 64)
+    assert r64["reduction_f32"] >= 0.25, (
+        f"acceptance: hoisted f32 per-layer traffic reduction "
+        f"{r64['reduction_f32']:.1%} on csa-64 (must be >= 25%)"
+    )
+    print(
+        f"\ncsa-64 per-layer traffic: {r64['prehoist_mb']:.1f} MB pre-hoist -> "
+        f"{r64['hoisted_mb']:.1f} MB hoisted f32 ({r64['reduction_f32']:.1%} "
+        f"less), {r64['hoisted_bf16_mb']:.1f} MB bf16 "
+        f"({r64['reduction_bf16']:.1%} less)"
+    )
+    return rows + trows
 
 
 if __name__ == "__main__":

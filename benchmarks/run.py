@@ -26,6 +26,8 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json", action="store_true",
                     help="write experiments/bench/BENCH_<suite>.json per suite")
+    ap.add_argument("--suites", nargs="+", default=None,
+                    help="run only the named suites (default: all)")
     args = ap.parse_args(argv)
     quick = [] if args.full else ["--quick"]
 
@@ -54,6 +56,12 @@ def main(argv=None):
         ("partitioned", "partitioned streaming executor (repro.exec)",
          bench_partitioned.main),
     ]
+    if args.suites:
+        known = {k for k, _, _ in suites}
+        unknown = set(args.suites) - known
+        if unknown:
+            ap.error(f"unknown suites {sorted(unknown)} (known: {sorted(known)})")
+        suites = [s for s in suites if s[0] in args.suites]
     failed = []
     for key, name, fn in suites:
         print(f"\n#### {name} ####", flush=True)

@@ -39,6 +39,15 @@ class GNNConfig:
     num_layers: int = 4
     num_classes: int = A.NUM_CLASSES
     dtype: str = "float32"
+    # dtype of the staged edge streams (hoisted weight streams + gathered
+    # messages) on the groot* backends: "float32" (default, bit-exact) or
+    # "bfloat16" (halves the per-layer gather traffic; kernels accumulate
+    # in f32, parity bounds pinned by tests/test_forward_plan.py).
+    # Honored by the pipeline/service/executor paths, which read the
+    # config; direct ``gnn.forward``/``gnn.predict`` callers pass the
+    # explicit ``stream_dtype=`` kwarg instead (forward never sees a
+    # GNNConfig).
+    stream_dtype: str = "float32"
 
 
 IN_GROUPS = ("w_in_l_pos", "w_in_l_neg", "w_in_r_pos", "w_in_r_neg")
@@ -92,6 +101,7 @@ def forward(
     *,
     num_nodes: int,
     agg=None,
+    stream_dtype: Optional[str] = None,
 ):
     """Full forward pass -> logits (num_nodes, num_classes).
 
@@ -104,9 +114,18 @@ def forward(
     ``agg`` is an :class:`repro.kernels.ops.AggPair` (or None for the
     segment-sum reference).  Paths, most specific wins:
 
-      * **grouped** (``in_agg_grouped`` present — all ``groot*``
-        backends): the four fanin and two fanout groups are *channels of
-        one SpMM*.  The ``(E, 4)`` / ``(E, 2)`` group-weight matrices are
+      * **hoisted grouped** (``fwd_plan`` present — all ``groot*``
+        backends): the grouped path below, plus everything layer-invariant
+        hoisted out of the layer loop via the
+        :class:`~repro.kernels.forward_plan.ForwardPlan`: the group-weight
+        streams are staged into kernel layout ONCE per forward (2 weight
+        gathers total, not 2 per layer), activations are padded once per
+        layer and shared by both directions, and output assembly is a
+        single scatter-free permutation gather.  ``stream_dtype="bfloat16"``
+        stages the edge streams narrow (f32 accumulation in-kernel).
+      * **grouped** (``in_agg_grouped`` present): the four fanin and two
+        fanout groups are *channels of one SpMM*.  The ``(E, 4)`` /
+        ``(E, 2)`` group-weight matrices are
         built once, the mean norms are folded into them (exact — every
         edge's destination norm is known per edge), and each layer issues
         ONE grouped aggregation per direction: 6 -> 2 edge-stream gathers
@@ -138,7 +157,8 @@ def forward(
     out_grouped = getattr(agg, "out_agg_grouped", None)
     if in_grouped is not None and out_grouped is not None:
         return _forward_grouped(
-            params, x, edge_src, edge_dst, group_w, out_w, num_nodes, agg
+            params, x, edge_src, edge_dst, group_w, out_w, num_nodes, agg,
+            stream_dtype=stream_dtype,
         )
 
     deg = lambda idx, w: jax.ops.segment_sum(w, idx, num_segments=num_nodes)
@@ -175,13 +195,19 @@ def forward(
     return h @ params["head"]["w"] + params["head"]["b"]
 
 
-def _forward_grouped(params, x, edge_src, edge_dst, group_w, out_w, num_nodes, agg):
+def _forward_grouped(params, x, edge_src, edge_dst, group_w, out_w, num_nodes, agg,
+                     *, stream_dtype: Optional[str] = None):
     """Grouped hot path: one aggregation per direction per layer.
 
     Group weights become ``(E, G)`` matrices (column order = IN_GROUPS /
     OUT_GROUPS) with the per-destination mean norm folded in, so the
     grouped SpMM's output planes are already normalised and the layer
     reduces to ``einsum('gnf,gfh->nh')`` over the stacked group weights.
+
+    When the pair carries a :class:`~repro.kernels.forward_plan.ForwardPlan`
+    the loop below is replaced by :func:`_forward_hoisted`; this body is
+    the pre-hoist walk, kept as the bit-exactness oracle
+    (``ops.unhoisted(pair)`` routes here).
     """
     wg_in = jnp.stack([group_w[nm] for nm in IN_GROUPS], axis=1)     # (E, 4)
     wg_out = jnp.stack([out_w[nm] for nm in OUT_GROUPS], axis=1)     # (E, 2)
@@ -191,6 +217,10 @@ def _forward_grouped(params, x, edge_src, edge_dst, group_w, out_w, num_nodes, a
     deg_out = jax.ops.segment_sum(wg_out, edge_src, num_segments=num_nodes)
     wg_in = wg_in * (1.0 / jnp.maximum(deg_in, 1.0))[edge_dst]
     wg_out = wg_out * (1.0 / jnp.maximum(deg_out, 1.0))[edge_src]
+
+    fp = getattr(agg, "fwd_plan", None)
+    if fp is not None and agg.in_agg_staged is not None:
+        return _forward_hoisted(params, x, wg_in, wg_out, agg, fp, stream_dtype)
 
     h = x
     for layer in params["layers"]:
@@ -203,6 +233,55 @@ def _forward_grouped(params, x, edge_src, edge_dst, group_w, out_w, num_nodes, a
             gin = agg.in_agg_grouped(h, wg_in)                       # (4, N, F)
             acc = acc + jnp.einsum("gnf,gfh->nh", gin.astype(acc.dtype), w_in_stack)
         gout = agg.out_agg_grouped(h, wg_out)                        # (2, N, F)
+        acc = acc + jnp.einsum("gnf,gfh->nh", gout.astype(acc.dtype), w_out_stack)
+        h = jax.nn.relu(acc)
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def _forward_hoisted(params, x, wg_in, wg_out, agg, fp, stream_dtype):
+    """Hoisted grouped hot path: everything layer-invariant leaves the loop.
+
+    The :class:`~repro.kernels.forward_plan.ForwardPlan` contract:
+
+      * the fanin/fanout group-weight streams are staged into each
+        bucket's ELL layout (and the HD chunk layout) ONCE — 2 weight
+        gathers per FORWARD, so layers 2..L touch zero edge-weight bytes;
+      * activations are padded once per layer, shared by both direction
+        walks (pre-hoist each aggregation padded its own copy);
+      * the fused path's per-layer weight stacks are padded in a prologue;
+      * output assembly inside the staged walks is one permutation gather
+        — zero ``.at[].add`` scatters per forward.
+
+    ``stream_dtype="bfloat16"`` narrows the staged weight streams and the
+    gathered messages; kernels accumulate in f32.
+    """
+    sdt = None
+    if stream_dtype is not None and jnp.dtype(stream_dtype) != jnp.float32:
+        sdt = jnp.dtype(stream_dtype)
+    sw_in = fp.stage_in(wg_in, dtype=sdt)
+    sw_out = fp.stage_out(wg_out, dtype=sdt)
+    layers = params["layers"]
+    fused = agg.in_agg_mm_staged is not None
+    stacks_in = [jnp.stack([l[nm] for nm in IN_GROUPS], axis=0) for l in layers]
+    stacks_out = [jnp.stack([l[nm] for nm in OUT_GROUPS], axis=0) for l in layers]
+    if fused:
+        stacks_in = [fp.pad_weight_stack(s) for s in stacks_in]
+
+    h = x
+    for layer, w_in_stack, w_out_stack in zip(layers, stacks_in, stacks_out):
+        acc = h @ layer["w_self"] + layer["b"]
+        f = h.shape[1]
+        h_p = fp.pad_x(h)
+        if sdt is not None:
+            h_p = h_p.astype(sdt)
+        if fused:
+            acc = acc + agg.in_agg_mm_staged(h_p, sw_in, w_in_stack)[
+                :, : acc.shape[1]
+            ].astype(acc.dtype)
+        else:
+            gin = agg.in_agg_staged(h_p, sw_in)[:, :, :f]            # (4, N, F)
+            acc = acc + jnp.einsum("gnf,gfh->nh", gin.astype(acc.dtype), w_in_stack)
+        gout = agg.out_agg_staged(h_p, sw_out)[:, :, :f]             # (2, N, F)
         acc = acc + jnp.einsum("gnf,gfh->nh", gout.astype(acc.dtype), w_out_stack)
         h = jax.nn.relu(acc)
     return h @ params["head"]["w"] + params["head"]["b"]
@@ -267,15 +346,16 @@ def train(
     return params, history
 
 
-@partial(jax.jit, static_argnames=("num_nodes", "agg"))
-def _predict(params, x, edge_src, edge_dst, edge_inv, edge_slot, num_nodes, agg):
+@partial(jax.jit, static_argnames=("num_nodes", "agg", "stream_dtype"))
+def _predict(params, x, edge_src, edge_dst, edge_inv, edge_slot, num_nodes, agg,
+             stream_dtype=None):
     return jnp.argmax(
         forward(
             params, x, edge_src, edge_dst, edge_inv, edge_slot,
-            num_nodes=num_nodes, agg=agg,
+            num_nodes=num_nodes, agg=agg, stream_dtype=stream_dtype,
         ),
         axis=-1,
-    )
+    ).astype(jnp.int32)
 
 
 def _make_agg(g, backend: str):
@@ -287,7 +367,10 @@ def _make_agg(g, backend: str):
     return ops.make_agg_pair(g.edge_src, g.edge_dst, g.num_nodes, backend)
 
 
-def predict(params, design, features, backend: str = "ref") -> np.ndarray:
+def predict(
+    params, design, features, backend: str = "ref",
+    *, stream_dtype: Optional[str] = None,
+) -> np.ndarray:
     g = design.to_edge_graph() if hasattr(design, "to_edge_graph") else design
     inv = None if g.edge_inv is None else jnp.asarray(g.edge_inv)
     slot = None if g.edge_slot is None else jnp.asarray(g.edge_slot)
@@ -301,6 +384,7 @@ def predict(params, design, features, backend: str = "ref") -> np.ndarray:
             slot,
             g.num_nodes,
             _make_agg(g, backend),
+            stream_dtype,
         )
     )
 
@@ -315,6 +399,7 @@ def predict_partitioned(
     streaming: bool = True,
     capacity: int = 2,
     prefetch: int = 1,
+    stream_dtype: Optional[str] = None,
 ) -> np.ndarray:
     """Per-partition inference; core-node predictions only (paper's flow).
 
@@ -332,10 +417,11 @@ def predict_partitioned(
 
         return stream_predict_partitioned(
             params, subgraphs, features, num_nodes, backend,
-            capacity=capacity, prefetch=prefetch,
+            capacity=capacity, prefetch=prefetch, stream_dtype=stream_dtype,
         )
     return predict_partitioned_loop(
-        params, subgraphs, features, num_nodes, backend
+        params, subgraphs, features, num_nodes, backend,
+        stream_dtype=stream_dtype,
     )
 
 
@@ -345,14 +431,18 @@ def predict_partitioned_loop(
     features: np.ndarray,
     num_nodes: int,
     backend: str = "ref",
+    *,
+    stream_dtype: Optional[str] = None,
 ) -> np.ndarray:
     """Sequential reference: one unpadded device call per subgraph.
 
     Kept as the bit-exactness oracle for the streaming executor and as the
     baseline ``benchmarks/bench_partitioned.py`` measures against (it
     recompiles per subgraph shape and staging never overlaps the device).
+    Predictions are int32 end-to-end (``_predict`` emits int32 argmax),
+    matching the streamed path — parity never rides on an implicit upcast.
     """
-    out = np.zeros(num_nodes, dtype=np.int64)
+    out = np.zeros(num_nodes, dtype=np.int32)
     for sg in subgraphs:
         feats = jnp.asarray(features[sg.global_ids])
         inv = None if sg.edge_inv is None else jnp.asarray(sg.edge_inv)
@@ -366,6 +456,7 @@ def predict_partitioned_loop(
             slot,
             sg.num_nodes,
             _make_agg(sg.to_edge_graph(), backend),
+            stream_dtype,
         )
         out[sg.global_ids[: sg.num_core]] = np.asarray(pred)[: sg.num_core]
     return out

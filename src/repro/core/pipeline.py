@@ -58,6 +58,10 @@ class PipelineConfig:
     memory_budget_bytes: Optional[int] = None
     stream_capacity: int = 2      # same-bucket partitions packed per launch
     stream_prefetch: int = 1      # packed batches staged ahead of the device
+    # edge-stream dtype for the hoisted groot* forward ("bfloat16" halves
+    # the staged stream bytes; kernels accumulate f32).  None defers to
+    # ``gnn.stream_dtype``.
+    stream_dtype: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -107,6 +111,59 @@ def memory_model_bytes(
         p = cfg.in_features * h * 3 + (cfg.num_layers - 1) * 3 * h * h + h * cfg.num_classes
         bytes_ += p * f32
     return int(bytes_)
+
+
+def layer_traffic_model_bytes(
+    num_nodes: int,
+    num_edges: int,
+    cfg: gnn.GNNConfig,
+    *,
+    hoisted: bool = True,
+    stream_dtype: Optional[str] = None,
+    slots_in: Optional[int] = None,
+    slots_out: Optional[int] = None,
+    segments_in: int = 4,
+    segments_out: int = 4,
+) -> int:
+    """Modeled per-layer HBM traffic of the grouped aggregation hot path.
+
+    Counts the three per-layer terms the ForwardPlan hoisting targets
+    (array-accurate when the caller passes the real plan ``num_slots`` /
+    ``num_segments``; pow-2-padding estimates otherwise):
+
+      * **edge-message streams** — ``x[src]`` gathered once per direction
+        per layer: ``(slots_in + slots_out) * H * stream_bytes``.  Both
+        paths pay it; ``stream_dtype="bfloat16"`` halves it.
+      * **edge-weight streams** — pre-hoist each layer re-gathers the
+        (E, 4) fanin + (E, 2) fanout group weights into kernel layout;
+        hoisted stages them once per forward, so the per-layer share is
+        amortised by ``num_layers``.
+      * **output assembly** — pre-hoist each aggregation issues one
+        ``(N, H)`` scatter per LD bucket plus one for HD (each a
+        read-modify-write of the output array) plus the final read;
+        hoisted assembles with a single permutation gather (concat write
+        + gather read + result write: 3 passes).
+    """
+    f32 = 4
+    sdt = np.dtype(stream_dtype) if stream_dtype is not None else np.dtype("float32")
+    sb = sdt.itemsize
+    h = cfg.hidden
+    s_in = 2 * num_edges if slots_in is None else slots_in
+    s_out = 2 * num_edges if slots_out is None else slots_out
+    layers = max(cfg.num_layers, 1)
+
+    traffic = (s_in + s_out) * h * sb                 # message streams
+    w_bytes = (4 * s_in + 2 * s_out) * sb             # group-weight streams
+    traffic += w_bytes // layers if hoisted else w_bytes
+    out_plane = num_nodes * h * f32                   # one (N, H) pass
+    if hoisted:
+        traffic += 2 * 3 * out_plane                  # both directions
+    else:
+        # segments already counts the HD pass: 2 touches (read+write) per
+        # scatter segment, plus the final read of the assembled output
+        traffic += (2 * segments_in + 1) * out_plane
+        traffic += (2 * segments_out + 1) * out_plane
+    return int(traffic)
 
 
 @dataclasses.dataclass
@@ -229,9 +286,19 @@ def infer(params, prep: PreparedDesign, *, backend: Optional[str] = None) -> np.
     """
     if prep.subgraphs is None:
         backend = backend or prep.cfg.aggregate
-        return gnn.predict(params, prep.graph, prep.feats, backend=backend)
+        return gnn.predict(
+            params, prep.graph, prep.feats, backend=backend,
+            stream_dtype=_effective_stream_dtype(prep.cfg),
+        )
     pred, _ = infer_streaming(params, prep, backend=backend)
     return pred
+
+
+def _effective_stream_dtype(cfg: PipelineConfig) -> Optional[str]:
+    """The staged edge-stream dtype a run uses: the pipeline-level knob
+    wins, else the GNN config's; f32 normalises to None (bit-exact path)."""
+    sdt = cfg.stream_dtype or cfg.gnn.stream_dtype
+    return None if sdt in (None, "float32") else sdt
 
 
 def infer_streaming(
@@ -260,6 +327,7 @@ def infer_streaming(
         executor = shared_executor(
             params, backend, capacity=cfg.stream_capacity,
             prefetch=cfg.stream_prefetch,
+            stream_dtype=_effective_stream_dtype(cfg),
         )
     plan = plan_from_subgraphs(
         list(prep.subgraphs), prep.num_nodes, num_edges=prep.num_edges,

@@ -99,6 +99,24 @@ class PartitionPlan:
         big = self.buckets[-1]
         return memory_model_bytes(capacity * big.n_pad, capacity * big.e_pad, gnn_cfg)
 
+    def peak_layer_traffic_bytes(
+        self, gnn_cfg, capacity: int, *, hoisted: bool = True,
+        stream_dtype: str | None = None,
+    ) -> int:
+        """Modeled per-layer HBM traffic of the largest packed launch
+        (the ForwardPlan hoisting before/after comparison the partitioned
+        benchmark reports — packed streamed batches inherit hoisted plans
+        through ``make_agg_pair``)."""
+        from repro.core.pipeline import layer_traffic_model_bytes
+
+        if not self.buckets:
+            return 0
+        big = self.buckets[-1]
+        return layer_traffic_model_bytes(
+            capacity * big.n_pad, capacity * big.e_pad, gnn_cfg,
+            hoisted=hoisted, stream_dtype=stream_dtype,
+        )
+
 
 def _bucket_for(num_nodes: int, num_edges: int, min_nodes: int, min_edges: int) -> BucketShape:
     n_pad, e_pad = ops.padded_shape(

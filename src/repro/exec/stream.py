@@ -97,13 +97,14 @@ class StreamingExecutor:
         prefetch: int = 1,
         min_nodes: int = 64,
         min_edges: int = 128,
+        stream_dtype: Optional[str] = None,
     ):
         """Either ``params`` (a fresh runner is built) or an existing
         ``runner`` (the service scheduler shares its compile probe)."""
         if runner is None:
             if params is None:
                 raise ValueError("need params or a BucketRunner")
-            runner = BucketRunner(params, backend)
+            runner = BucketRunner(params, backend, stream_dtype=stream_dtype)
         self.runner = runner
         self.capacity = max(1, capacity)
         self.prefetch = max(0, prefetch)
@@ -135,13 +136,13 @@ class StreamingExecutor:
     # -- execution ----------------------------------------------------------
 
     def run_plan(self, plan: PartitionPlan, features: np.ndarray) -> np.ndarray:
-        """Stream every partition batch; returns (num_nodes,) int64 global
+        """Stream every partition batch; returns (num_nodes,) int32 global
         predictions with every core row written (halo rows are computed
         under their owning partition)."""
         t_wall = time.perf_counter()
         schedule = plan.schedule(self.capacity)
         self.buckets_seen.update(plan.buckets)
-        out = np.zeros(plan.num_nodes, dtype=np.int64)
+        out = np.zeros(plan.num_nodes, dtype=np.int32)
         compiles_before = self.runner.compile_count
 
         if self.prefetch == 0 or len(schedule) <= 1:
@@ -262,14 +263,18 @@ _EXECUTOR_POOL_MAX = 8
 
 
 def shared_executor(
-    params, backend: str, *, capacity: int = 2, prefetch: int = 1
+    params, backend: str, *, capacity: int = 2, prefetch: int = 1,
+    stream_dtype: Optional[str] = None,
 ) -> StreamingExecutor:
     """The process-wide executor for (params identity, backend, knobs)."""
-    key = (id(params), backend, capacity, prefetch)
+    if stream_dtype == "float32":
+        stream_dtype = None   # numerically identical: share the executor
+    key = (id(params), backend, capacity, prefetch, stream_dtype)
     hit = _EXECUTOR_POOL.get(key)
     if hit is not None and hit[0] is params:
         return hit[1]
-    ex = StreamingExecutor(params, backend, capacity=capacity, prefetch=prefetch)
+    ex = StreamingExecutor(params, backend, capacity=capacity, prefetch=prefetch,
+                           stream_dtype=stream_dtype)
     if len(_EXECUTOR_POOL) >= _EXECUTOR_POOL_MAX:
         _EXECUTOR_POOL.clear()
     _EXECUTOR_POOL[key] = (params, ex)
@@ -285,6 +290,7 @@ def stream_predict_partitioned(
     *,
     capacity: int = 2,
     prefetch: int = 1,
+    stream_dtype: Optional[str] = None,
 ) -> np.ndarray:
     """One-shot convenience: stream through the shared executor pool.
 
@@ -294,5 +300,6 @@ def stream_predict_partitioned(
     Repeated calls with the same params reuse one executor (and so one
     jit cache): recurring subgraph buckets compile nothing new.
     """
-    ex = shared_executor(params, backend, capacity=capacity, prefetch=prefetch)
+    ex = shared_executor(params, backend, capacity=capacity, prefetch=prefetch,
+                         stream_dtype=stream_dtype)
     return ex.run_subgraphs(subgraphs, features, num_nodes)

@@ -1,0 +1,117 @@
+"""Forward-invariant hoisting: everything a GNN forward reuses across layers.
+
+The paper's HD/LD co-design does the expensive restructuring once on the
+host and keeps per-iteration device work minimal.  The degree-bucketed
+kernels honor that for the edge *topology* (one :class:`SpmmPlan` per
+graph) but, pre-hoist, not for the edge *weights* or the output assembly:
+every layer of every forward re-gathered the (E, 4)/(E, 2) group-weight
+matrices into each bucket's ELL layout and re-scattered the output once
+per bucket.  For a static EDA graph those are invariant across all
+``num_layers`` layers — the dominant avoidable HBM-traffic term in the
+memory-bound regime row-parallel baselines live in.
+
+A :class:`ForwardPlan` packages what one forward hoists out of the layer
+loop:
+
+  * both direction plans (fanin/fanout) plus their concatenated edge-id
+    streams, so :meth:`stage_in`/:meth:`stage_out` gather each direction's
+    weight streams ONCE per forward (``PROBE["weight_gathers"] == 2``
+    regardless of ``num_layers``) — optionally cast to a narrow
+    ``stream_dtype`` (bf16 halves the staged bytes; kernels accumulate
+    in f32);
+  * the padded feature staging contract (:meth:`pad_x`,
+    :meth:`pad_weight_stack` record the F_TILE-quantised shapes), so
+    activations are padded once per layer and shared by both direction
+    walks, and the fused path's weight stacks are padded in a prologue;
+  * the scatter-free assembly indices live on the :class:`SpmmPlan`s
+    themselves (``asm_index``) — the staged walks never issue an
+    ``out.at[rows].add``.
+
+ForwardPlans are pure functions of graph structure and are registered in
+the process-wide structural cache beside ``SpmmPlan``/``AggPair``
+(:func:`repro.kernels.plan_cache.cached_forward_plan`), so the executor
+and service inherit hoisted plans across launches through
+``make_agg_pair``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.groot_spmm import (
+    F_TILE,
+    SpmmPlan,
+    StagedWeights,
+    pad_features,
+    plan_cat_eids,
+    stage_group_weights,
+)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ForwardPlan:
+    """Layer-invariant staging schedule for one graph (host-side, static).
+
+    Identity-hashed (``eq=False``): like :class:`~repro.kernels.ops.AggPair`,
+    the cached instance doubles as a jit static argument.
+    """
+
+    in_plan: SpmmPlan
+    out_plan: SpmmPlan
+    in_cat_eids: np.ndarray      # int32 concat of fanin bucket + HD eids
+    out_cat_eids: np.ndarray
+
+    @property
+    def num_nodes(self) -> int:
+        return self.in_plan.num_nodes
+
+    @property
+    def num_edges(self) -> int:
+        return self.in_plan.num_edges
+
+    # -- per-forward staging -------------------------------------------------
+
+    def stage_in(self, wg: jax.Array, *, dtype=None) -> StagedWeights:
+        """Gather the (E, 4) fanin group weights into kernel layout once."""
+        return stage_group_weights(
+            self.in_plan, wg, cat_eids=self.in_cat_eids, dtype=dtype
+        )
+
+    def stage_out(self, wg: jax.Array, *, dtype=None) -> StagedWeights:
+        """Gather the (E, 2) fanout group weights into kernel layout once."""
+        return stage_group_weights(
+            self.out_plan, wg, cat_eids=self.out_cat_eids, dtype=dtype
+        )
+
+    # -- padded-shape contract ----------------------------------------------
+
+    @staticmethod
+    def pad_x(x: jax.Array) -> jax.Array:
+        """(N, F) -> (N + 1, F_pad): one pad per layer, shared by both
+        direction walks (pre-hoist each aggregation padded its own copy)."""
+        return pad_features(x)
+
+    @staticmethod
+    def pad_weight_stack(w_stack: jax.Array) -> jax.Array:
+        """(G, F, H) -> (G, F_pad, H_pad) f32 for the fused kernels —
+        padded once per forward in the prologue, not per layer call."""
+        g, f, h = w_stack.shape
+        return jnp.pad(
+            w_stack.astype(jnp.float32),
+            ((0, 0), (0, -f % F_TILE), (0, -h % F_TILE)),
+        )
+
+
+def build_forward_plan(in_plan: SpmmPlan, out_plan: SpmmPlan) -> ForwardPlan:
+    """Assemble the hoisting schedule from a graph's two direction plans."""
+    assert in_plan.num_nodes == out_plan.num_nodes
+    assert in_plan.num_edges == out_plan.num_edges
+    return ForwardPlan(
+        in_plan=in_plan,
+        out_plan=out_plan,
+        in_cat_eids=plan_cat_eids(in_plan),
+        out_cat_eids=plan_cat_eids(out_plan),
+    )

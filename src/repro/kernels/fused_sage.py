@@ -27,10 +27,15 @@ from repro.kernels.groot_spmm import F_TILE, PROBE
 
 
 def _fused_kernel(msgs_ref, w_ref, o_ref, *, rows: int, deg: int):
-    """(R_t*d, F) tile + (F, H_t) weights -> (R_t, H_t) = rowsum @ W."""
-    m = msgs_ref[...]
+    """(R_t*d, F) tile + (F, H_t) weights -> (R_t, H_t) = rowsum @ W.
+
+    Accumulation is always f32 (bf16 edge streams are widened in VREGs),
+    matching the unfused LD kernel's numerics."""
+    m = msgs_ref[...].astype(jnp.float32)
     agg = m.reshape(rows, deg, m.shape[-1]).sum(axis=1)
-    o_ref[...] = jax.lax.dot(agg, w_ref[...], preferred_element_type=o_ref.dtype)
+    o_ref[...] = jax.lax.dot(
+        agg, w_ref[...].astype(jnp.float32), preferred_element_type=o_ref.dtype
+    )
 
 
 def fused_ld_matmul(
@@ -63,7 +68,7 @@ def fused_ld_matmul(
             pl.BlockSpec((f_pad, h_t), lambda i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((r_t, h_t), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r_pad, h_pad), msgs.dtype),
+        out_shape=jax.ShapeDtypeStruct((r_pad, h_pad), jnp.float32),
         interpret=interpret,
     )(msgs, w_mat)
 
@@ -86,9 +91,12 @@ def fused_ref(msgs: jax.Array, w_mat: jax.Array, deg: int) -> jax.Array:
 def _fused_kernel_grouped(msgs_ref, wg_ref, w_ref, o_ref, *, rows: int, deg: int,
                           groups: int):
     """(R_t*d, F) tile + (R_t*d, G) weights + (G, F, H_t) mats ->
-    (R_t, H_t) = sum_g rowsum(wg[:, g] * msgs) @ W_g."""
-    m = msgs_ref[...]
-    w = wg_ref[...]
+    (R_t, H_t) = sum_g rowsum(wg[:, g] * msgs) @ W_g.
+
+    Messages and weights may arrive as bf16 streams; the weighted
+    reduction and the MXU products accumulate in f32."""
+    m = msgs_ref[...].astype(jnp.float32)
+    w = wg_ref[...].astype(jnp.float32)
     acc = None
     for g in range(groups):  # static, tiny (2 or 4): unrolls on the MXU
         agg = (m * w[:, g][:, None]).reshape(rows, deg, m.shape[-1]).sum(axis=1)
@@ -126,9 +134,9 @@ def fused_ld_matmul_grouped(
             pl.BlockSpec((g, f_pad, h_t), lambda i, j: (0, 0, j)),
         ],
         out_specs=pl.BlockSpec((r_t, h_t), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r_pad, h_pad), msgs.dtype),
+        out_shape=jax.ShapeDtypeStruct((r_pad, h_pad), jnp.float32),
         interpret=interpret,
-    )(msgs, wg.astype(msgs.dtype), w_stack)
+    )(msgs, wg.astype(msgs.dtype), w_stack.astype(jnp.float32))
 
 
 def fused_grouped_ref(msgs: jax.Array, wg: jax.Array, w_stack: jax.Array,

@@ -63,9 +63,33 @@ SUBLANE = 8            # f32 sublane quantum
 # stream is gathered and how many times the bucket-kernel schedule is
 # walked — the quantities the grouped-SpMM refactor reduces from 6 to 2
 # per layer.  ``pallas_calls`` counts individual kernel launches.
+#
+# The forward-invariant hoisting counters:
+#   ``weight_gathers``   passes over the per-edge weight arrays (one
+#                        ``jnp.take`` of the (E, G) stream).  Pre-hoist the
+#                        grouped forward paid 2 per layer; the ForwardPlan
+#                        stages the streams once -> 2 per FORWARD.
+#   ``output_scatters``  ``out.at[rows].add`` ops issued.  The historical
+#                        walks scattered once per bucket (+1 for HD,
+#                        ``plan.num_segments`` per aggregation); since the
+#                        scatter-free rewrite EVERY walk assembles via the
+#                        inverse count-sort permutation, so the counter
+#                        reads 0 — it exists as a regression tripwire: any
+#                        reintroduced output scatter must bump it (the CI
+#                        fast lane gates <= 2 per forward).
+#   ``stream_bytes``     modeled HBM bytes of gathered edge streams
+#                        (messages + staged weights), accumulated at trace
+#                        time from static shapes/dtypes.
 # ---------------------------------------------------------------------------
 
-PROBE = {"edge_stream_gathers": 0, "kernel_walks": 0, "pallas_calls": 0}
+PROBE = {
+    "edge_stream_gathers": 0,
+    "kernel_walks": 0,
+    "pallas_calls": 0,
+    "weight_gathers": 0,
+    "output_scatters": 0,
+    "stream_bytes": 0,
+}
 
 
 def reset_probe() -> None:
@@ -87,7 +111,7 @@ class LdBucket:
 
     deg: int
     rows: np.ndarray        # (R_pad,) int32 destination row ids (pad = -1)
-    cols: np.ndarray        # (R_pad * deg,) int64 source node ids (pad = N)
+    cols: np.ndarray        # (R_pad * deg,) int32 source node ids (pad = N)
     eids: np.ndarray        # (R_pad * deg,) int32 edge ids (pad = E)
     rows_per_tile: int      # R_t
 
@@ -101,7 +125,7 @@ class HdPlan:
     """Rows with degree > E_T, chunked into E_t-edge pieces."""
 
     rows: np.ndarray        # (n_hd,) int32 destination row ids
-    cols: np.ndarray        # (n_chunks * E_t,) int64 source ids (pad = N)
+    cols: np.ndarray        # (n_chunks * E_t,) int32 source ids (pad = N)
     eids: np.ndarray        # (n_chunks * E_t,) int32 edge ids (pad = E)
     chunk_meta: np.ndarray  # (n_chunks, 2) int32: [output row slot, is_first]
 
@@ -117,6 +141,14 @@ class SpmmPlan:
     buckets: tuple          # tuple[LdBucket, ...]
     hd: Optional[HdPlan]
     e_t: int = E_T
+    # Inverse count-sort permutation for scatter-free output assembly:
+    # bucket (then HD) reductions concatenated row-major form a
+    # (asm_rows, F) array whose LAST row is zero; ``asm_index[r]`` is the
+    # concat position of destination row r (degree-0 rows point at the
+    # zero row).  A row appears in exactly one LD bucket OR the HD plan —
+    # never both — so one gather (no adds) assembles the (N, F) output.
+    asm_index: Optional[np.ndarray] = None   # (N,) int32
+    asm_rows: int = 0
 
     def padding_overhead(self) -> float:
         """Padded-slot fraction — the cost of ELL bucketing (tests assert
@@ -124,6 +156,19 @@ class SpmmPlan:
         slots = sum(b.eids.size for b in self.buckets)
         slots += self.hd.eids.size if self.hd else 0
         return slots / max(self.num_edges, 1)
+
+    @property
+    def num_slots(self) -> int:
+        """Gathered edge-stream rows per walk (real edges + ELL padding)."""
+        return sum(b.eids.size for b in self.buckets) + (
+            self.hd.eids.size if self.hd else 0
+        )
+
+    @property
+    def num_segments(self) -> int:
+        """Output segments one aggregation produces (LD buckets + HD) —
+        the per-walk scatter count of the pre-hoist assembly."""
+        return len(self.buckets) + (1 if self.hd is not None else 0)
 
 
 def build_plan(
@@ -142,6 +187,11 @@ def build_plan(
     edge_src = np.asarray(edge_src, dtype=np.int64)
     edge_dst = np.asarray(edge_dst, dtype=np.int64)
     n, e = int(num_nodes), int(edge_dst.shape[0])
+    # indices are staged as int32 (halves the index bytes per launch);
+    # partitioned subgraphs guarantee device-sized N and E
+    assert n < 2**31 and e < 2**31, (
+        f"graph too large for int32 plan indices ({n} nodes, {e} edges)"
+    )
     deg = np.bincount(edge_dst, minlength=n).astype(np.int64)
 
     # CSR-style row starts after a stable count-sort of edges by dest row.
@@ -170,7 +220,7 @@ def build_plan(
                 LdBucket(
                     deg=d,
                     rows=rows_p,
-                    cols=cols,
+                    cols=cols.astype(np.int32),
                     eids=flat.astype(np.int32),
                     rows_per_tile=r_t,
                 )
@@ -196,12 +246,50 @@ def build_plan(
         cols = np.where(flat < e, edge_src[np.minimum(flat, e - 1)], n)
         hd = HdPlan(
             rows=hd_rows.astype(np.int32),
-            cols=cols,
+            cols=cols.astype(np.int32),
             eids=flat.astype(np.int32),
             chunk_meta=meta,
         )
 
-    return SpmmPlan(num_nodes=n, num_edges=e, buckets=tuple(buckets), hd=hd, e_t=e_t)
+    asm_index, asm_rows = _assembly_index(n, buckets, hd)
+    return SpmmPlan(
+        num_nodes=n, num_edges=e, buckets=tuple(buckets), hd=hd, e_t=e_t,
+        asm_index=asm_index, asm_rows=asm_rows,
+    )
+
+
+def _assembly_index(
+    n: int, buckets: list[LdBucket], hd: Optional[HdPlan]
+) -> tuple[np.ndarray, int]:
+    """Inverse count-sort permutation (scatter-free output assembly).
+
+    Concatenating every bucket's padded reduction and the HD rows
+    row-major, followed by one zero row, gives an (asm_rows, F) array
+    where ``take(cat, asm_index)`` is exactly what the per-bucket
+    ``out.at[rows].add`` passes used to build — a destination row belongs
+    to exactly one LD bucket or the HD plan, so no adds are needed.
+    """
+    asm = np.full(n, -1, dtype=np.int64)
+    off = 0
+    for b in buckets:
+        live = b.rows >= 0
+        rows_live = b.rows[live].astype(np.int64)
+        assert (asm[rows_live] < 0).all(), "row in two LD buckets"
+        asm[rows_live] = off + np.nonzero(live)[0]
+        off += b.rows.shape[0]
+    if hd is not None:
+        hd_rows = hd.rows.astype(np.int64)
+        # a row receiving both an LD and an HD contribution would need an
+        # add on top of the gather; the degree partition makes it
+        # impossible within one plan — assert it
+        assert (asm[hd_rows] < 0).all(), "row is both LD and HD"
+        asm[hd_rows] = off + np.arange(hd.rows.shape[0])
+        off += hd.rows.shape[0]
+    zero_row = off
+    asm[asm < 0] = zero_row           # degree-0 rows read the zero row
+    asm_rows = off + 1
+    assert asm_rows < 2**31
+    return asm.astype(np.int32), asm_rows
 
 
 # ---------------------------------------------------------------------------
@@ -318,8 +406,41 @@ def hd_apply(
 
 
 # ---------------------------------------------------------------------------
-# Full SpMM: gather (XLA) -> per-bucket kernels -> scatter (XLA)
+# Full SpMM: gather (XLA) -> per-bucket kernels -> permutation assembly (XLA)
 # ---------------------------------------------------------------------------
+
+def pad_features(x: jax.Array) -> jax.Array:
+    """Feature staging for the bucket walks: one zero row appended (the
+    gather pad target) and lanes padded to the F_TILE quantum.  Hoisted
+    callers (the ForwardPlan forward) pad once per layer and share the
+    result across both direction walks."""
+    f = x.shape[1]
+    return jnp.pad(x, ((0, 1), (0, -f % F_TILE)))
+
+
+def assemble_rows(plan: SpmmPlan, parts: list, f_pad: int) -> jax.Array:
+    """Scatter-free output assembly via the inverse count-sort permutation.
+
+    ``parts`` are the per-bucket (R_pad, F_pad) reductions (then HD) in
+    plan order; one concatenate + one gather replaces the pre-hoist
+    ``num_segments`` ``out.at[rows].add`` passes over the (N, F) output.
+    """
+    parts = list(parts) + [jnp.zeros((1, f_pad), jnp.float32)]
+    cat = jnp.concatenate(parts, axis=0)
+    return jnp.take(cat, jnp.asarray(plan.asm_index), axis=0)
+
+
+def assemble_rows_grouped(
+    plan: SpmmPlan, parts: list, groups: int, f_pad: int
+) -> jax.Array:
+    """Grouped variant: parts are (G, R_pad, F_pad); concat/gather on axis 1.
+
+    ``groups`` is passed explicitly — a zero-edge graph has no parts to
+    infer it from but must still return (G, N, F_pad)."""
+    parts = list(parts) + [jnp.zeros((groups, 1, f_pad), jnp.float32)]
+    cat = jnp.concatenate(parts, axis=1)
+    return jnp.take(cat, jnp.asarray(plan.asm_index), axis=1)
+
 
 def apply_plan(
     plan: SpmmPlan,
@@ -335,10 +456,14 @@ def apply_plan(
     """
     PROBE["edge_stream_gathers"] += 1
     PROBE["kernel_walks"] += 1
+    if w is not None:
+        PROBE["weight_gathers"] += 1
+        PROBE["stream_bytes"] += plan.num_slots * x.dtype.itemsize
     n, f = x.shape
-    f_extra = -f % F_TILE
-    x_p = jnp.pad(x, ((0, 1), (0, f_extra)))  # +1 zero row = gather pad target
+    f_pad = f + (-f % F_TILE)
+    x_p = pad_features(x)
     w_p = None if w is None else jnp.pad(w.astype(x.dtype), (0, 1))
+    PROBE["stream_bytes"] += plan.num_slots * f_pad * x.dtype.itemsize
 
     def gather(cols: np.ndarray, eids: np.ndarray) -> jax.Array:
         g = jnp.take(x_p, jnp.asarray(cols), axis=0)
@@ -346,22 +471,21 @@ def apply_plan(
             g = g * jnp.take(w_p, jnp.asarray(eids), axis=0)[:, None]
         return g
 
-    out = jnp.zeros((n, f + f_extra), jnp.float32)
+    parts = []
     for b in plan.buckets:
         msgs = gather(b.cols, b.eids)
-        red = ld_bucket_apply(
-            msgs, b.deg, b.rows_per_tile, interpret=interpret, mxu=mxu
+        parts.append(
+            ld_bucket_apply(msgs, b.deg, b.rows_per_tile, interpret=interpret, mxu=mxu)
         )
-        rows = jnp.asarray(np.where(b.rows < 0, n, b.rows).astype(np.int32))
-        out = out.at[rows].add(red, mode="drop")
-
     if plan.hd is not None:
         msgs = gather(plan.hd.cols, plan.hd.eids)
-        red = hd_apply(
-            msgs, plan.hd.chunk_meta, len(plan.hd.rows), plan.e_t, interpret=interpret
+        parts.append(
+            hd_apply(
+                msgs, plan.hd.chunk_meta, len(plan.hd.rows), plan.e_t,
+                interpret=interpret,
+            )
         )
-        out = out.at[jnp.asarray(plan.hd.rows)].add(red, mode="drop")
-
+    out = assemble_rows(plan, parts, f_pad)
     return out[:, :f].astype(x.dtype)
 
 
@@ -505,6 +629,102 @@ def hd_grouped_apply(
     )(jnp.asarray(chunk_meta), wg, msgs)
 
 
+# ---------------------------------------------------------------------------
+# Forward-invariant weight staging.  The (E, G) group-weight matrices of a
+# GNN forward are layer-invariant; pre-hoist every layer of every forward
+# re-gathered them into each bucket's ELL layout (``jnp.take(wg_p,
+# b.eids)`` per bucket per layer).  ``stage_group_weights`` performs ONE
+# gather of the concatenated edge-id stream and slices the result into
+# per-bucket (and HD-chunk) streams the staged walks consume directly —
+# layers 2..L touch zero edge-weight bytes.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StagedWeights:
+    """Edge-weight streams pre-gathered into kernel layout (traced arrays,
+    aligned with ``plan.buckets`` order; ``hd`` in HD-chunk layout)."""
+
+    buckets: tuple                 # per-bucket (R_pad * deg, G)
+    hd: Optional[jax.Array]        # (n_chunks * e_t, G) or None
+    groups: int
+
+
+def plan_cat_eids(plan: SpmmPlan) -> np.ndarray:
+    """Concatenated edge-id stream of every bucket + HD chunk (int32) —
+    the single gather index of :func:`stage_group_weights`."""
+    parts = [b.eids for b in plan.buckets]
+    if plan.hd is not None:
+        parts.append(plan.hd.eids)
+    if not parts:
+        return np.zeros(0, np.int32)
+    return np.concatenate(parts).astype(np.int32)
+
+
+def stage_group_weights(
+    plan: SpmmPlan,
+    wg: jax.Array,
+    *,
+    cat_eids: Optional[np.ndarray] = None,
+    dtype=None,
+) -> StagedWeights:
+    """Gather the (E, G) group-weight matrix into every bucket's ELL
+    layout and the HD chunk layout in ONE pass (``dtype`` casts the
+    staged streams, e.g. bf16 — kernels accumulate in f32 regardless)."""
+    PROBE["weight_gathers"] += 1
+    g = wg.shape[1]
+    if cat_eids is None:
+        cat_eids = plan_cat_eids(plan)
+    wg_p = jnp.pad(wg.astype(jnp.float32), ((0, 1), (0, 0)))  # row E = 0 weight
+    cat = jnp.take(wg_p, jnp.asarray(cat_eids), axis=0)
+    if dtype is not None:
+        cat = cat.astype(dtype)
+    PROBE["stream_bytes"] += int(cat_eids.size) * g * cat.dtype.itemsize
+    chunks = []
+    off = 0
+    for b in plan.buckets:
+        chunks.append(cat[off : off + b.eids.size])
+        off += b.eids.size
+    hd = None
+    if plan.hd is not None:
+        hd = cat[off : off + plan.hd.eids.size]
+    return StagedWeights(buckets=tuple(chunks), hd=hd, groups=g)
+
+
+def apply_plan_grouped_staged(
+    plan: SpmmPlan,
+    x_p: jax.Array,
+    staged: StagedWeights,
+    *,
+    interpret: bool = True,
+    mxu: bool = False,
+) -> jax.Array:
+    """Hoisted grouped walk: pre-padded features (see :func:`pad_features`)
+    + pre-staged weight streams in, ``(G, N, F_pad)`` f32 out.  Touches no
+    edge-weight bytes and issues no output scatters (permutation
+    assembly)."""
+    PROBE["edge_stream_gathers"] += 1
+    PROBE["kernel_walks"] += 1
+    f_pad = x_p.shape[1]
+    PROBE["stream_bytes"] += plan.num_slots * f_pad * x_p.dtype.itemsize
+    parts = []
+    for b, wge in zip(plan.buckets, staged.buckets):
+        msgs = jnp.take(x_p, jnp.asarray(b.cols), axis=0)
+        parts.append(
+            ld_grouped_apply(
+                msgs, wge, b.deg, b.rows_per_tile, interpret=interpret, mxu=mxu
+            )
+        )
+    if plan.hd is not None:
+        msgs = jnp.take(x_p, jnp.asarray(plan.hd.cols), axis=0)
+        parts.append(
+            hd_grouped_apply(
+                msgs, staged.hd, plan.hd.chunk_meta, len(plan.hd.rows), plan.e_t,
+                interpret=interpret,
+            )
+        )
+    return assemble_rows_grouped(plan, parts, staged.groups, f_pad)
+
+
 def apply_plan_grouped(
     plan: SpmmPlan,
     x: jax.Array,
@@ -519,32 +739,13 @@ def apply_plan_grouped(
     serve every group — ``wg`` is ``(E, G)`` with one weight column per
     slot x polarity group.  Returns ``(G, N, F)`` in ``x.dtype``.
     Matches ``stack([apply_plan(plan, x, wg[:, g]) for g])``.
+
+    Stages the weight streams per call; the hoisted forward
+    (:mod:`repro.kernels.forward_plan`) stages once per forward instead.
     """
-    PROBE["edge_stream_gathers"] += 1
-    PROBE["kernel_walks"] += 1
-    n, f = x.shape
-    g = wg.shape[1]
-    f_extra = -f % F_TILE
-    x_p = jnp.pad(x, ((0, 1), (0, f_extra)))  # +1 zero row = gather pad target
-    wg_p = jnp.pad(wg.astype(jnp.float32), ((0, 1), (0, 0)))  # row E = 0 weight
-
-    out = jnp.zeros((g, n, f + f_extra), jnp.float32)
-    for b in plan.buckets:
-        msgs = jnp.take(x_p, jnp.asarray(b.cols), axis=0)
-        wge = jnp.take(wg_p, jnp.asarray(b.eids), axis=0)
-        red = ld_grouped_apply(
-            msgs, wge, b.deg, b.rows_per_tile, interpret=interpret, mxu=mxu
-        )
-        rows = jnp.asarray(np.where(b.rows < 0, n, b.rows).astype(np.int32))
-        out = out.at[:, rows].add(red, mode="drop")
-
-    if plan.hd is not None:
-        msgs = jnp.take(x_p, jnp.asarray(plan.hd.cols), axis=0)
-        wge = jnp.take(wg_p, jnp.asarray(plan.hd.eids), axis=0)
-        red = hd_grouped_apply(
-            msgs, wge, plan.hd.chunk_meta, len(plan.hd.rows), plan.e_t,
-            interpret=interpret,
-        )
-        out = out.at[:, jnp.asarray(plan.hd.rows)].add(red, mode="drop")
-
+    f = x.shape[1]
+    staged = stage_group_weights(plan, wg)
+    out = apply_plan_grouped_staged(
+        plan, pad_features(x), staged, interpret=interpret, mxu=mxu
+    )
     return out[:, :, :f].astype(x.dtype)

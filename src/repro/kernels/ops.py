@@ -30,13 +30,19 @@ import numpy as np
 
 from repro.kernels import plan_cache as pc
 from repro.kernels import ref as kref
+from repro.kernels.forward_plan import ForwardPlan, build_forward_plan
 from repro.kernels.groot_spmm import (
     PROBE,
     SpmmPlan,
+    StagedWeights,
     apply_plan,
     apply_plan_grouped,
+    apply_plan_grouped_staged,
+    assemble_rows,
     build_plan,
     hd_grouped_apply,
+    pad_features,
+    stage_group_weights,
 )
 from repro.kernels.fused_sage import fused_ld_matmul, fused_ld_matmul_grouped
 
@@ -81,6 +87,14 @@ class AggPair:
     out_agg_grouped: Optional[Callable] = None
     # grouped fuse: (x, wg (E, G), w_stack (G, F, H)) -> (N, H)
     in_agg_mm_grouped: Optional[Callable] = None
+    # forward-invariant hoisting (all groot* backends): the ForwardPlan
+    # stages the weight streams once per forward; the *_staged entry
+    # points consume pre-padded features + staged streams and return f32
+    # padded-lane outputs — (G, N, F_pad), or (N, H_pad) for the fuse
+    fwd_plan: Optional[ForwardPlan] = None
+    in_agg_staged: Optional[Callable] = None     # (x_p, staged) -> (G, N, F_pad)
+    out_agg_staged: Optional[Callable] = None
+    in_agg_mm_staged: Optional[Callable] = None  # (x_p, staged, wm_p) -> (N, H_pad)
 
     def __hash__(self):  # jit static-arg friendliness
         return id(self)
@@ -94,7 +108,28 @@ def ungrouped(pair: AggPair) -> AggPair:
     the model layer back onto the per-group loop (parity tests and the
     grouped-vs-per-group benchmark)."""
     return dataclasses.replace(
-        pair, in_agg_grouped=None, out_agg_grouped=None, in_agg_mm_grouped=None
+        pair,
+        in_agg_grouped=None,
+        out_agg_grouped=None,
+        in_agg_mm_grouped=None,
+        fwd_plan=None,
+        in_agg_staged=None,
+        out_agg_staged=None,
+        in_agg_mm_staged=None,
+    )
+
+
+def unhoisted(pair: AggPair) -> AggPair:
+    """A copy of ``pair`` without the ForwardPlan — keeps the grouped
+    walks but re-stages the weight streams every layer (the pre-hoist
+    walk; the hoisting bit-exactness tests and the before/after traffic
+    benchmark route through it)."""
+    return dataclasses.replace(
+        pair,
+        fwd_plan=None,
+        in_agg_staged=None,
+        out_agg_staged=None,
+        in_agg_mm_staged=None,
     )
 
 
@@ -133,9 +168,11 @@ def _groot_pair(
     if use_cache:
         in_plan = pc.cached_plan(src, dst, num_nodes)
         out_plan = pc.cached_plan(dst, src, num_nodes)
+        fwd_plan = pc.cached_forward_plan(src, dst, num_nodes)
     else:
         in_plan = build_plan(src, dst, num_nodes)
         out_plan = build_plan(dst, src, num_nodes)
+        fwd_plan = build_forward_plan(in_plan, out_plan)
 
     def in_agg(x, w=None):
         return apply_plan(in_plan, x, w, interpret=interpret, mxu=mxu)
@@ -149,8 +186,19 @@ def _groot_pair(
     def out_agg_grouped(x, wg):
         return apply_plan_grouped(out_plan, x, wg, interpret=interpret, mxu=mxu)
 
+    def in_agg_staged(x_p, staged):
+        return apply_plan_grouped_staged(
+            in_plan, x_p, staged, interpret=interpret, mxu=mxu
+        )
+
+    def out_agg_staged(x_p, staged):
+        return apply_plan_grouped_staged(
+            out_plan, x_p, staged, interpret=interpret, mxu=mxu
+        )
+
     in_agg_mm = None
     in_agg_mm_grouped = None
+    in_agg_mm_staged = None
     if fused:
 
         def in_agg_mm(x, w, w_mat):
@@ -159,6 +207,11 @@ def _groot_pair(
         def in_agg_mm_grouped(x, wg, w_stack):
             return _apply_plan_fused_grouped(
                 in_plan, x, wg, w_stack, interpret=interpret
+            )
+
+        def in_agg_mm_staged(x_p, staged, wm_p):
+            return _apply_plan_fused_grouped_staged(
+                in_plan, x_p, staged, wm_p, interpret=interpret
             )
 
     return AggPair(
@@ -171,6 +224,10 @@ def _groot_pair(
         in_agg_grouped=in_agg_grouped,
         out_agg_grouped=out_agg_grouped,
         in_agg_mm_grouped=in_agg_mm_grouped,
+        fwd_plan=fwd_plan,
+        in_agg_staged=in_agg_staged,
+        out_agg_staged=out_agg_staged,
+        in_agg_mm_staged=in_agg_mm_staged,
     )
 
 
@@ -179,18 +236,21 @@ def _apply_plan_fused(plan: SpmmPlan, x, w, w_mat, *, interpret: bool):
 
     Output is (N, H) = (sum_e w_e x[src_e] into rows) @ w_mat, with the
     aggregated (N, F) intermediate never materialised for LD rows.
+    Assembly is scatter-free (inverse count-sort permutation).
     """
     from repro.kernels.groot_spmm import F_TILE, hd_apply
 
     PROBE["edge_stream_gathers"] += 1
     PROBE["kernel_walks"] += 1
+    if w is not None:
+        PROBE["weight_gathers"] += 1
     n, f = x.shape
     h = w_mat.shape[1]
     f_extra = -f % F_TILE
     h_extra = -h % F_TILE
-    x_p = jnp.pad(x, ((0, 1), (0, f_extra)))
+    x_p = pad_features(x)
     w_p = None if w is None else jnp.pad(w.astype(x.dtype), (0, 1))
-    wm_p = jnp.pad(w_mat.astype(x.dtype), ((0, f_extra), (0, h_extra)))
+    wm_p = jnp.pad(w_mat.astype(jnp.float32), ((0, f_extra), (0, h_extra)))
 
     def gather(cols, eids):
         g = jnp.take(x_p, jnp.asarray(cols), axis=0)
@@ -198,65 +258,77 @@ def _apply_plan_fused(plan: SpmmPlan, x, w, w_mat, *, interpret: bool):
             g = g * jnp.take(w_p, jnp.asarray(eids), axis=0)[:, None]
         return g
 
-    out = jnp.zeros((n, h + h_extra), x.dtype)
+    parts = []
     for b in plan.buckets:
         msgs = gather(b.cols, b.eids)
-        red = fused_ld_matmul(msgs, wm_p, b.deg, b.rows_per_tile, interpret=interpret)
-        rows = jnp.asarray(np.where(b.rows < 0, n, b.rows).astype(np.int32))
-        out = out.at[rows].add(red, mode="drop")
+        parts.append(
+            fused_ld_matmul(msgs, wm_p, b.deg, b.rows_per_tile, interpret=interpret)
+        )
     if plan.hd is not None:
         msgs = gather(plan.hd.cols, plan.hd.eids)
         red = hd_apply(
             msgs, plan.hd.chunk_meta, len(plan.hd.rows), plan.e_t, interpret=interpret
         )
-        out = out.at[jnp.asarray(plan.hd.rows)].add(
-            red[:, :f] @ wm_p[:f, :], mode="drop"
-        )
-    return out[:, :h]
+        parts.append(red[:, :f] @ wm_p[:f, :])
+    out = assemble_rows(plan, parts, h + h_extra)
+    return out[:, :h].astype(x.dtype)
 
 
-def _apply_plan_fused_grouped(plan: SpmmPlan, x, wg, w_stack, *, interpret: bool):
-    """Grouped fused path: ``sum_g (group-g aggregation) @ w_stack[g]``.
+def _apply_plan_fused_grouped_staged(
+    plan: SpmmPlan, x_p, staged: StagedWeights, wm_p, *, interpret: bool
+):
+    """Hoisted grouped fused walk: pre-padded features, pre-staged weight
+    streams, and a pre-padded ``(G, F_pad, H_pad)`` weight stack in;
+    ``(N, H_pad)`` f32 out.
 
     One gather of the edge stream and one walk of the bucket schedule
     serve all G groups; per LD slab the grouped fused kernel keeps every
     group's (R_t, F) aggregate in VMEM and sums the G MXU products before
     the single (R_t, H_t) store.  HD rows reduce through the grouped HD
     kernel and contract with the weight stack outside (HD rows are few).
+    Output assembly is one permutation gather — no scatters.
     """
-    from repro.kernels.groot_spmm import F_TILE
-
     PROBE["edge_stream_gathers"] += 1
     PROBE["kernel_walks"] += 1
-    n, f = x.shape
-    g_n, _, h = w_stack.shape
-    f_extra = -f % F_TILE
-    h_extra = -h % F_TILE
-    x_p = jnp.pad(x, ((0, 1), (0, f_extra)))
-    wg_p = jnp.pad(wg.astype(x.dtype), ((0, 1), (0, 0)))
-    wm_p = jnp.pad(w_stack.astype(x.dtype), ((0, 0), (0, f_extra), (0, h_extra)))
-
-    out = jnp.zeros((n, h + h_extra), x.dtype)
-    for b in plan.buckets:
+    f_pad = x_p.shape[1]
+    h_pad = wm_p.shape[2]
+    PROBE["stream_bytes"] += plan.num_slots * f_pad * x_p.dtype.itemsize
+    parts = []
+    for b, wge in zip(plan.buckets, staged.buckets):
         msgs = jnp.take(x_p, jnp.asarray(b.cols), axis=0)
-        wge = jnp.take(wg_p, jnp.asarray(b.eids), axis=0)
-        red = fused_ld_matmul_grouped(
-            msgs, wge, wm_p, b.deg, b.rows_per_tile, interpret=interpret
+        parts.append(
+            fused_ld_matmul_grouped(
+                msgs, wge, wm_p, b.deg, b.rows_per_tile, interpret=interpret
+            )
         )
-        rows = jnp.asarray(np.where(b.rows < 0, n, b.rows).astype(np.int32))
-        out = out.at[rows].add(red, mode="drop")
     if plan.hd is not None:
         msgs = jnp.take(x_p, jnp.asarray(plan.hd.cols), axis=0)
-        wge = jnp.take(wg_p, jnp.asarray(plan.hd.eids), axis=0)
         red = hd_grouped_apply(
-            msgs, wge, plan.hd.chunk_meta, len(plan.hd.rows), plan.e_t,
+            msgs, staged.hd, plan.hd.chunk_meta, len(plan.hd.rows), plan.e_t,
             interpret=interpret,
-        )  # (G, n_hd, F_pad)
-        dense = jnp.einsum(
-            "gnf,gfh->nh", red[:, :, :f].astype(x.dtype), wm_p[:, :f, :]
-        )
-        out = out.at[jnp.asarray(plan.hd.rows)].add(dense, mode="drop")
-    return out[:, :h]
+        )  # (G, n_hd, F_pad); pad lanes are zero, so the full-F_pad
+        # contraction against the zero-padded stack is exact
+        parts.append(jnp.einsum("gnf,gfh->nh", red, wm_p))
+    return assemble_rows(plan, parts, h_pad)
+
+
+def _apply_plan_fused_grouped(plan: SpmmPlan, x, wg, w_stack, *, interpret: bool):
+    """Grouped fused path: ``sum_g (group-g aggregation) @ w_stack[g]``.
+
+    Stages the weight streams and pads per call — the pre-hoist walk the
+    hoisted forward replaces (kept for the per-call API and as the
+    bit-exactness oracle of the hoisting refactor).
+    """
+    h = w_stack.shape[2]
+    staged = stage_group_weights(plan, wg)
+    out = _apply_plan_fused_grouped_staged(
+        plan,
+        pad_features(x),
+        staged,
+        ForwardPlan.pad_weight_stack(w_stack),
+        interpret=interpret,
+    )
+    return out[:, :h].astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -370,8 +442,26 @@ def make_agg_pair(
     )
 
 
-def groot_spmm(x, edge_src, edge_dst, num_nodes: int, w=None, *, backend="groot"):
-    """One-shot SpMM through the GROOT kernels (plan built per call — for
-    tests/benches; persistent users should hold an :class:`AggPair`)."""
-    pair = make_agg_pair(np.asarray(edge_src), np.asarray(edge_dst), num_nodes, backend)
+def groot_spmm(
+    x,
+    edge_src,
+    edge_dst,
+    num_nodes: int,
+    w=None,
+    *,
+    backend="groot",
+    use_cache: bool = True,
+):
+    """One-shot SpMM through the GROOT kernels (for tests/benches;
+    persistent users should hold an :class:`AggPair`).
+
+    The plan comes from the process-wide structural
+    :data:`~repro.kernels.plan_cache.PLAN_CACHE`: a recurring structure
+    builds nothing.  Pass ``use_cache=False`` to force a cold plan build
+    (benchmarks that time host-side plan construction).
+    """
+    pair = make_agg_pair(
+        np.asarray(edge_src), np.asarray(edge_dst), num_nodes, backend,
+        use_cache=use_cache,
+    )
     return pair.in_agg(jnp.asarray(x), None if w is None else jnp.asarray(w))

@@ -15,6 +15,10 @@ edge arrays (the kernel-layer analogue of ``repro.io.aiger``'s
 format-invariant structural hash):
 
   * ``("plan", graph_key, e_t)``  -> a built ``SpmmPlan``
+  * ``("fwd", graph_key, e_t)``   -> a built ``ForwardPlan`` (the
+    layer-invariant hoisting schedule of
+    ``repro.kernels.forward_plan`` — both direction plans + staged
+    edge-id streams)
   * ``("pair", graph_key, backend)`` -> a built ``AggPair`` (see
     ``repro.kernels.ops.make_agg_pair``) — a hit returns the *same
     object*, so ``jax.jit(..., static_argnames=("agg",))`` callers get a
@@ -148,4 +152,22 @@ def cached_plan(edge_src, edge_dst, num_nodes: int, *, e_t: int | None = None):
     key = ("plan", graph_key(edge_src, edge_dst, num_nodes), e_t)
     return PLAN_CACHE.get_or_build(
         key, lambda: build_plan(edge_src, edge_dst, num_nodes, e_t=e_t)
+    )
+
+
+def cached_forward_plan(edge_src, edge_dst, num_nodes: int, *, e_t: int | None = None):
+    """The graph's :class:`~repro.kernels.forward_plan.ForwardPlan` through
+    the process-wide cache (direction plans themselves come from
+    :func:`cached_plan`, so a recurring structure builds nothing)."""
+    from repro.kernels.forward_plan import build_forward_plan
+    from repro.kernels.groot_spmm import E_T
+
+    e_t = E_T if e_t is None else e_t
+    key = ("fwd", graph_key(edge_src, edge_dst, num_nodes), e_t)
+    return PLAN_CACHE.get_or_build(
+        key,
+        lambda: build_forward_plan(
+            cached_plan(edge_src, edge_dst, num_nodes, e_t=e_t),
+            cached_plan(edge_dst, edge_src, num_nodes, e_t=e_t),
+        ),
     )

@@ -47,7 +47,8 @@ STRUCTURE_KEYED_BACKENDS = ("groot", "groot_mxu", "groot_fused")
 class BucketRunner:
     """One jitted padded GNN forward; counts compiles and device calls."""
 
-    def __init__(self, params, backend: str = "ref", *, max_structures: int = 64):
+    def __init__(self, params, backend: str = "ref", *, max_structures: int = 64,
+                 stream_dtype: str | None = None):
         if backend not in SHAPE_STABLE_BACKENDS + STRUCTURE_KEYED_BACKENDS:
             raise ValueError(
                 f"service backend must be one of {SHAPE_STABLE_BACKENDS} "
@@ -56,6 +57,9 @@ class BucketRunner:
             )
         self._params = jax.tree_util.tree_map(jnp.asarray, params)
         self._backend = backend
+        # edge-stream dtype for the hoisted groot* forward (None/f32 =
+        # bit-exact staging; "bfloat16" halves the staged stream bytes)
+        self._stream_dtype = stream_dtype
         self.compile_count = 0
         self.run_count = 0
         # structure-keyed backends: jit retains one executable (+ its
@@ -78,9 +82,9 @@ class BucketRunner:
                 agg = ops.make_agg_pair(edge_src, edge_dst, num_nodes, "onehot")
             logits = gnn.forward(
                 params, x, edge_src, edge_dst, edge_inv, edge_slot,
-                num_nodes=num_nodes, agg=agg,
+                num_nodes=num_nodes, agg=agg, stream_dtype=self._stream_dtype,
             )
-            return jnp.argmax(logits, axis=-1)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
         self._jit = jax.jit(_fwd, static_argnames=("num_nodes", "agg"))
 
@@ -149,9 +153,11 @@ class ShapeBucketScheduler:
         max_bucket_edges: int | None = None,
         stream_capacity: int = 2,
         stream_partitioner: str = "multilevel",
+        stream_dtype: str | None = None,
     ):
         assert capacity >= 1
-        self.runner = BucketRunner(params, backend, max_structures=max_structures)
+        self.runner = BucketRunner(params, backend, max_structures=max_structures,
+                                   stream_dtype=stream_dtype)
         self.capacity = capacity
         self.min_nodes = min_nodes
         self.min_edges = min_edges

@@ -337,7 +337,7 @@ class VerificationService:
                     self._fail(req, e)
                 continue
             for req, key, prep, items, t_prep in batch:
-                out = np.zeros(prep.num_nodes, dtype=np.int64)
+                out = np.zeros(prep.num_nodes, dtype=np.int32)
                 for it in items:
                     p = preds[(req.req_id, it.part_index)]
                     out[it.global_ids[: it.num_core]] = p[: it.num_core]
