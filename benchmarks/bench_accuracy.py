@@ -7,24 +7,19 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import print_table, save_table, trained_params
-from repro.core import pipeline as P
+from benchmarks.common import make_session, print_table, save_table, trained_params
 
 
 def run(datasets, bits_list, partitions, train_bits=8, epochs=300):
     rows = []
     for ds in datasets:
-        params = trained_params(ds, train_bits, epochs)
+        sess = make_session(trained_params(ds, train_bits, epochs), dataset=ds)
         for bits in bits_list:
             for parts in partitions:
                 for regrow in ((True,) if parts == 1 else (True, False)):
-                    r = P.run_pipeline(
-                        P.PipelineConfig(
-                            dataset=ds, bits=bits,
-                            num_partitions=parts, regrow=regrow,
-                        ),
-                        params,
-                    )
+                    r = sess.options(
+                        num_partitions=parts, regrow=regrow
+                    ).verify(bits=bits, verify=False, use_cache=False)
                     rows.append(
                         {
                             "dataset": ds,

@@ -11,23 +11,20 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import print_table, save_table, trained_params
-from repro.core import pipeline as P
+from benchmarks.common import make_session, print_table, save_table, trained_params
 
 
 def run(datasets, bits_list, partitions, batch=1, epochs=200):
     rows = []
     for ds in datasets:
-        params = trained_params(ds, 8, epochs)
+        sess = make_session(
+            trained_params(ds, 8, epochs), dataset=ds, batch=batch, regrow=True
+        )
         for bits in bits_list:
             base = None
             for parts in partitions:
-                r = P.run_pipeline(
-                    P.PipelineConfig(
-                        dataset=ds, bits=bits, batch=batch,
-                        num_partitions=parts, regrow=True,
-                    ),
-                    params,
+                r = sess.options(num_partitions=parts).verify(
+                    bits=bits, verify=False, use_cache=False
                 )
                 if base is None:
                     base = r.unpartitioned_memory_bytes

@@ -26,7 +26,11 @@ from repro.core import pipeline as P
 from repro.core.features import groot_features
 from repro.core.partition import PARTITIONERS
 from repro.core.regrowth import extract_partitions
-from repro.exec import StreamingExecutor, build_partition_plan
+from repro.exec import (
+    StreamingExecutor,
+    build_partition_plan,
+    stream_predict_partitioned,
+)
 
 CAPACITY = 2
 
@@ -97,7 +101,9 @@ def bench_regrow(params, bits_grid: list[int], k: int) -> list[dict]:
             ("noregrow", False, 1), ("regrow1", True, 1), ("regrow2", True, 2)
         ):
             subs = extract_partitions(g, part, regrow=regrow, hops=hops)
-            pred = gnn.predict_partitioned(params, subs, feats, g.num_nodes, "ref")
+            pred = stream_predict_partitioned(
+                params, subs, feats, g.num_nodes, "ref"
+            )
             accs[label] = gnn.accuracy(pred, d.label)
         rows.append({
             "bits": bits, "k": k, "acc_full": acc_full,

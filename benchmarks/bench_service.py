@@ -19,8 +19,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import print_table, save_table, trained_params
-from repro.core import pipeline as P
+from benchmarks.common import make_session, print_table, save_table, trained_params
 
 
 def _workload(quick: bool) -> list[list[tuple[str, int]]]:
@@ -32,18 +31,13 @@ def _workload(quick: bool) -> list[list[tuple[str, int]]]:
 
 
 def bench_one_shot(params, waves, num_partitions: int) -> dict:
+    sess = make_session(params, num_partitions=num_partitions)
     lat = []
     t0 = time.perf_counter()
     for wave in waves:
         for fam, bits in wave:
             t1 = time.perf_counter()
-            P.run_pipeline(
-                P.PipelineConfig(
-                    dataset=fam, bits=bits, num_partitions=num_partitions
-                ),
-                params,
-                verify_result=True,
-            )
+            sess.verify(dataset=fam, bits=bits, use_cache=False)
             lat.append(time.perf_counter() - t1)
     wall = time.perf_counter() - t0
     n = sum(len(w) for w in waves)
@@ -60,18 +54,18 @@ def bench_one_shot(params, waves, num_partitions: int) -> dict:
 
 
 def bench_service(params, waves, num_partitions: int, capacity: int) -> dict:
-    from repro.service import VerificationService
-
     results = []
-    with VerificationService(
+    with make_session(
         params, num_partitions=num_partitions, capacity=capacity
-    ) as svc:
+    ) as sess:
         t0 = time.perf_counter()
         for wave in waves:  # each wave's requests are in flight together
-            tickets = [svc.submit_design(fam, bits) for fam, bits in wave]
-            results += [svc.result(t, timeout=600) for t in tickets]
+            tickets = [
+                sess.submit(dataset=fam, bits=bits) for fam, bits in wave
+            ]
+            results += [sess.result(t, timeout=600) for t in tickets]
         wall = time.perf_counter() - t0
-        stats = svc.stats()
+        stats = sess.stats()["service"]
     assert all(r.status != "error" for r in results), [r.error for r in results]
     lat = [r.timings.get("total", 0.0) for r in results]
     n_buckets = len(stats["buckets"])

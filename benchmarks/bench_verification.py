@@ -16,9 +16,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks.common import print_table, save_table, trained_params
+from benchmarks.common import make_session, print_table, save_table, trained_params
 from repro.core import aig as A
-from repro.core import pipeline as P
 from repro.core.labels import structural_detect
 
 
@@ -33,7 +32,7 @@ def abc_runtime_model(bits: int) -> float:
 
 
 def run(bits_list, parts_list, epochs=200):
-    params = trained_params("csa", 8, epochs)
+    sess = make_session(trained_params("csa", 8, epochs), dataset="csa")
     rows = []
     for bits in bits_list:
         design = A.make_design("csa", bits)
@@ -41,10 +40,8 @@ def run(bits_list, parts_list, epochs=200):
         structural_detect(design)
         t_detector = time.perf_counter() - t0
         for parts in parts_list:
-            r = P.run_pipeline(
-                P.PipelineConfig(dataset="csa", bits=bits, num_partitions=parts),
-                params,
-                verify_result=bits <= 32,
+            r = sess.options(num_partitions=parts).verify(
+                bits=bits, verify=bits <= 32, use_cache=False
             )
             rows.append(
                 {

@@ -17,6 +17,14 @@ def trained_params(dataset: str = "csa", bits: int = 8, epochs: int = 300):
     return params
 
 
+def make_session(params, **config):
+    """A `repro.api.Session` over a trained model — the benchmarks drive
+    the same façade users do (``sess.options(...)`` derives variants)."""
+    from repro.api import Session, SessionConfig
+
+    return Session(params, SessionConfig(**config))
+
+
 def timer(fn, *args, repeats: int = 3, **kw):
     fn(*args, **kw)  # warmup / compile
     best = float("inf")

@@ -1,42 +1,60 @@
-"""Quickstart: GROOT end-to-end — train the GNN on an 8-bit multiplier,
-verify a 32-bit multiplier with partitioning + boundary edge re-growth.
+"""Quickstart: GROOT end-to-end through the `repro.api.Session` façade —
+train the GNN on an 8-bit multiplier, then verify a larger one through
+every execution route the session can take: full graph, partitioned with
+and without re-growth, streamed under a device memory budget, and the
+Pallas kernel backends.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py            # full demo
+    PYTHONPATH=src python examples/quickstart.py --quick    # CI smoke run
 """
-from repro.core import pipeline as P
+import argparse
+
+from repro.api import Session, SessionConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--quick", action="store_true",
+                help="small bits / few epochs (the CI fast-lane smoke test)")
+args = ap.parse_args()
+BITS = 16 if args.quick else 32
+EPOCHS = 120 if args.quick else 300
+
+sess = Session(config=SessionConfig(dataset="csa", bits=BITS))
 
 print("1) training GraphSAGE on the 8-bit CSA multiplier (paper's setup)...")
-params, hist = P.train_model("csa", 8, epochs=300)
+hist = sess.train("csa", 8, epochs=EPOCHS)
 print(f"   final loss: {hist[-1][1]:.2e}")
 
-print("2) verifying a 32-bit CSA multiplier, unpartitioned...")
-r = P.run_pipeline(
-    P.PipelineConfig(dataset="csa", bits=32, num_partitions=1),
-    params,
-    verify_result=True,
-)
+print(f"2) verifying a {BITS}-bit CSA multiplier, unpartitioned...")
+r = sess.verify()
+print(f"   route: {r.routing.mode} — {r.routing.reason}")
 print(f"   accuracy {r.accuracy:.2%}  memory {r.peak_memory_bytes/1e6:.1f} MB  "
       f"verdict: {r.verdict.status}")
 
 print("3) same design, 8 partitions WITHOUT re-growth...")
-r_no = P.run_pipeline(
-    P.PipelineConfig(dataset="csa", bits=32, num_partitions=8, regrow=False),
-    params,
-)
+r_no = sess.options(num_partitions=8, regrow=False).verify(verify=False)
+print(f"   route: {r_no.routing.mode} (k={r_no.routing.k}, "
+      f"{r_no.routing.num_buckets} buckets)")
 print(f"   accuracy {r_no.accuracy:.2%}  memory {r_no.peak_memory_bytes/1e6:.1f} MB")
 
 print("4) 8 partitions WITH boundary edge re-growth (paper Alg. 1)...")
-r_re = P.run_pipeline(
-    P.PipelineConfig(dataset="csa", bits=32, num_partitions=8, regrow=True),
-    params,
-)
+r_re = sess.options(num_partitions=8, regrow=True).verify(verify=False)
 print(f"   accuracy {r_re.accuracy:.2%}  memory {r_re.peak_memory_bytes/1e6:.1f} MB")
 print(f"\n   re-growth recovered +{(r_re.accuracy - r_no.accuracy)*100:.2f}% accuracy")
 print(f"   memory reduced {(1 - r_re.peak_memory_bytes / r.unpartitioned_memory_bytes)*100:.1f}% vs unpartitioned")
 
-print("5) inference through the Pallas GROOT kernels (interpret mode)...")
-r_k = P.run_pipeline(
-    P.PipelineConfig(dataset="csa", bits=16, aggregate="groot_fused"),
-    params,
+print("5) a device memory budget: the router partitions and streams to fit...")
+budget = sess.options(memory_budget_bytes=r.unpartitioned_memory_bytes // 3)
+decision = budget.explain()
+print(f"   explain(): {decision.reason}")
+r_st = budget.verify(verify=False)
+assert r_st.routing.mode == decision.mode == "streamed"
+print(f"   accuracy {r_st.accuracy:.2%}  "
+      f"packed peak {r_st.routing.modeled_peak_bytes/1e6:.1f} MB  "
+      f"compiles {r_st.exec_stats['compiles']}  "
+      f"launches {r_st.exec_stats['launches']}")
+
+print("6) inference through the Pallas GROOT kernels (interpret mode)...")
+r_k = sess.options(backend="groot_fused").verify(
+    bits=8 if args.quick else 16, verify=False
 )
 print(f"   accuracy {r_k.accuracy:.2%} (HD/LD degree-bucketed kernel path)")

@@ -1,0 +1,36 @@
+"""`repro.api`: the stable public surface of the GROOT stack.
+
+    from repro.api import Session, SessionConfig
+
+    sess = Session(params, SessionConfig(backend="groot_fused"))
+    print(sess.explain(dataset="csa", bits=256).mode)     # the route
+    r = sess.verify("design.aig")                         # sync
+    ticket = sess.submit(dataset="csa", bits=32)          # async (batched)
+    print(sess.result(ticket).status)
+
+One façade, one flattened config, one router: `Session.verify` inspects
+each prepared design against the device-memory model and dispatches to
+full-graph, partitioned-loop, streamed-executor, or (via submit/poll)
+service-batched execution.  The legacy entry points — ``run_pipeline``,
+``VerificationService``, ``gnn.predict_partitioned`` — are deprecated
+shims over this module.
+
+``__all__`` is the public API contract: the tier-1 suite snapshots it
+against a committed manifest (``tests/data/api_surface.txt``), so
+accidental surface changes fail the build.
+"""
+from repro.api.config import SessionConfig, resolve_backend_alias  # noqa: F401
+from repro.api.session import (  # noqa: F401
+    RoutingDecision,
+    Session,
+    SessionResult,
+    route_prepared,
+)
+
+__all__ = [
+    "RoutingDecision",
+    "Session",
+    "SessionConfig",
+    "SessionResult",
+    "route_prepared",
+]

@@ -1,0 +1,180 @@
+"""`SessionConfig`: the one flattened configuration of the GROOT stack.
+
+Before the façade, each front door owned its own knob set —
+``PipelineConfig`` (with the ``aggregate=`` spelling of the backend),
+``GNNConfig.stream_dtype``, ``ServiceConfig`` (with the ``backend=``
+spelling), and raw executor kwargs — and callers re-threaded the same
+values through every layer.  ``SessionConfig`` is the superset, named
+once:
+
+  * design/ingest defaults (``dataset``/``bits``/``seed``/``batch``),
+  * execution (``backend`` everywhere — ``aggregate=`` remains a
+    deprecated write-only alias), ``stream_dtype``, the nested
+    ``GNNConfig``,
+  * partitioning + re-growth (``num_partitions``, ``regrow``,
+    ``regrow_hops``, ``partitioner``),
+  * streaming (``streaming``, ``memory_budget_bytes``,
+    ``stream_capacity``, ``stream_prefetch``),
+  * batched-service limits (bucket floors/ceilings, worker counts,
+    cache sizes).
+
+The legacy configs are now *projections* of this one:
+:meth:`pipeline_config` and :meth:`service_config` derive them, and
+:meth:`from_pipeline` lifts an old ``PipelineConfig`` so the deprecated
+entry points can delegate without changing behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.gnn import GNNConfig
+from repro.core.pipeline import resolve_backend_alias  # noqa: F401 — re-export
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionConfig:
+    """Every knob of the full/partitioned/streamed/batched stack, flat."""
+
+    # -- design / ingest defaults (per-call ``verify(dataset=, bits=)``
+    #    overrides win) ------------------------------------------------------
+    dataset: str = "csa"
+    bits: int = 32
+    seed: int = 0
+    batch: int = 1
+
+    # -- execution ----------------------------------------------------------
+    #: aggregation backend: "ref" | "onehot" | "groot" | "groot_mxu" |
+    #: "groot_fused" — ONE name across every layer (``aggregate=`` is the
+    #: deprecated alias).  None means "ref".
+    backend: Optional[str] = None
+    #: staged edge-stream dtype for the hoisted groot* forward (None/f32 =
+    #: bit-exact; "bfloat16" halves staged stream bytes, f32 accumulation)
+    stream_dtype: Optional[str] = None
+    gnn: GNNConfig = dataclasses.field(default_factory=GNNConfig)
+
+    # -- partitioning / re-growth (paper §III-C, Algorithm 1) ---------------
+    num_partitions: int = 1
+    regrow: bool = True
+    regrow_hops: int = 1
+    partitioner: str = "multilevel"
+
+    # -- streaming executor (repro.exec) ------------------------------------
+    #: route partitioned designs through the streaming executor (True, the
+    #: default) or the sequential per-subgraph loop (False)
+    streaming: bool = True
+    #: device budget: lets prepare() derive the partition count via
+    #: choose_k when num_partitions is not set explicitly
+    memory_budget_bytes: Optional[int] = None
+    stream_capacity: int = 2
+    stream_prefetch: int = 1
+
+    # -- batched service (repro.service; the submit()/poll() path) ----------
+    capacity: int = 2
+    min_nodes: int = 64
+    min_edges: int = 128
+    max_structures: int = 64
+    max_bucket_nodes: Optional[int] = None
+    max_bucket_edges: Optional[int] = None
+    prepare_workers: int = 2
+    cache_capacity: int = 1024
+    max_batch_requests: int = 16
+    max_done_retained: int = 4096
+
+    #: deprecated write-only alias of ``backend`` — consumed (and reset to
+    #: None) at construction so ``dataclasses.replace(cfg, backend=...)``
+    #: never sees a stale conflicting alias
+    aggregate: Optional[str] = None
+
+    def __post_init__(self):
+        backend = resolve_backend_alias(
+            self.backend, self.aggregate, owner="SessionConfig"
+        )
+        object.__setattr__(self, "backend", backend)
+        object.__setattr__(self, "aggregate", None)
+
+    # -- projections onto the legacy per-layer configs ----------------------
+
+    def replace(self, **overrides) -> "SessionConfig":
+        return dataclasses.replace(self, **overrides)
+
+    def pipeline_config(
+        self,
+        *,
+        dataset: Optional[str] = None,
+        bits: Optional[int] = None,
+        seed: Optional[int] = None,
+    ):
+        """The ``PipelineConfig`` view (what prepare/infer/verify read)."""
+        from repro.core import pipeline as P
+
+        return P.PipelineConfig(
+            dataset=self.dataset if dataset is None else dataset,
+            bits=self.bits if bits is None else bits,
+            batch=self.batch,
+            num_partitions=self.num_partitions,
+            regrow=self.regrow,
+            regrow_hops=self.regrow_hops,
+            partitioner=self.partitioner,
+            gnn=self.gnn,
+            backend=self.backend,
+            seed=self.seed if seed is None else seed,
+            memory_budget_bytes=self.memory_budget_bytes,
+            stream_capacity=self.stream_capacity,
+            stream_prefetch=self.stream_prefetch,
+            stream_dtype=self.stream_dtype,
+        )
+
+    def service_config(self):
+        """The ``ServiceConfig`` view (what the batched engine reads)."""
+        from repro.service.server import ServiceConfig
+
+        return ServiceConfig(
+            num_partitions=self.num_partitions,
+            regrow=self.regrow,
+            partitioner=self.partitioner,
+            backend=self.backend,
+            capacity=self.capacity,
+            max_structures=self.max_structures,
+            min_nodes=self.min_nodes,
+            min_edges=self.min_edges,
+            max_bucket_nodes=self.max_bucket_nodes,
+            max_bucket_edges=self.max_bucket_edges,
+            stream_capacity=self.stream_capacity,
+            prepare_workers=self.prepare_workers,
+            cache_capacity=self.cache_capacity,
+            max_batch_requests=self.max_batch_requests,
+            max_done_retained=self.max_done_retained,
+            stream_dtype=self.stream_dtype,
+        )
+
+    @classmethod
+    def from_pipeline(cls, cfg) -> "SessionConfig":
+        """Lift a legacy ``PipelineConfig`` (the ``run_pipeline`` shim's
+        path); field-for-field, so delegation is behaviour-preserving."""
+        return cls(
+            dataset=cfg.dataset,
+            bits=cfg.bits,
+            seed=cfg.seed,
+            batch=cfg.batch,
+            backend=cfg.backend,
+            stream_dtype=cfg.stream_dtype,
+            gnn=cfg.gnn,
+            num_partitions=cfg.num_partitions,
+            regrow=cfg.regrow,
+            regrow_hops=cfg.regrow_hops,
+            partitioner=cfg.partitioner,
+            streaming=True,   # run_pipeline always streamed partitioned runs
+            memory_budget_bytes=cfg.memory_budget_bytes,
+            stream_capacity=cfg.stream_capacity,
+            stream_prefetch=cfg.stream_prefetch,
+        )
+
+    def cache_key_part(self) -> tuple:
+        """Everything outcome-relevant for the session result LRU."""
+        return (
+            self.backend, self.stream_dtype, self.gnn, self.batch,
+            self.num_partitions, self.regrow, self.regrow_hops,
+            self.partitioner, self.streaming, self.memory_budget_bytes,
+            self.stream_capacity, self.min_nodes, self.min_edges,
+        )

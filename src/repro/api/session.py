@@ -1,0 +1,454 @@
+"""`Session`: the one façade over full / partitioned / streamed / batched
+GROOT verification.
+
+A :class:`Session` owns the long-lived state the legacy entry points each
+re-created per call — the trained params, the process-wide structural
+``PLAN_CACHE``, the shared :class:`~repro.exec.stream.StreamingExecutor`
+(and through it the :class:`~repro.service.scheduler.BucketRunner` jit
+pool), the lazily-started batched service engine, and a structural-hash
+result LRU — and routes every design through ONE decision point:
+
+    session.verify(design)      sync: route + run + verify
+    session.explain(design)     the routing decision, without running
+    session.submit()/poll()     async: the batched service engine
+
+The router (:func:`route_prepared`) inspects the *prepared* design
+against the analytic device-memory model and the config:
+
+  mode "full"         unpartitioned — the design fits (or no
+                      partitioning/budget was requested)
+  mode "partitioned"  sequential per-subgraph loop (``streaming=False``)
+  mode "streamed"     the ``repro.exec`` executor: bucketed packed
+                      launches, budget-driven k, host prefetch
+
+Legacy front doors (`run_pipeline`, `VerificationService`,
+`gnn.predict_partitioned`) delegate here and emit ``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.api.config import SessionConfig
+from repro.core import aig as A
+from repro.core import gnn
+from repro.core import pipeline as P
+from repro.core.verify import VerifyResult
+from repro.kernels.plan_cache import PLAN_CACHE
+from repro.service.cache import ResultCache
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingDecision:
+    """Why a design runs the way it runs (``session.explain()``)."""
+
+    mode: str                         # "full" | "partitioned" | "streamed"
+    backend: str
+    stream_dtype: Optional[str]       # effective staged-stream dtype (None=f32)
+    k: int                            # partition count (1 for full)
+    num_buckets: int                  # compile-unit count (streamed mode)
+    buckets: tuple                    # ((n_pad, e_pad), ...) ascending
+    modeled_full_bytes: int           # unpartitioned device-memory model
+    modeled_peak_bytes: int           # what is actually resident: full bytes,
+                                      # max per-subgraph, or the packed-launch
+                                      # peak (capacity slots of the big bucket)
+    memory_budget_bytes: Optional[int]
+    num_nodes: int
+    num_edges: int
+    reason: str
+
+
+@dataclasses.dataclass
+class SessionResult:
+    """One verified design: verdict + accuracy + probes + the route."""
+
+    name: str
+    status: str                       # verified|falsified|inconclusive|classified
+    accuracy: float
+    core_accuracy: float
+    verdict: Optional[VerifyResult]
+    cached: bool
+    num_nodes: int
+    num_edges: int
+    peak_memory_bytes: int            # peak over partitions (full bytes if k=1)
+    unpartitioned_memory_bytes: int
+    boundary_edge_frac: float
+    routing: RoutingDecision
+    timings: dict
+    plan_cache: dict                  # structural-cache deltas for this call
+    exec_stats: dict                  # streamed mode: executor probe deltas
+    predictions: Optional[np.ndarray] = None   # verify(return_predictions=True)
+
+
+# SessionConfig exposes the same (stream_dtype, gnn) attributes, so the
+# pipeline's normalisation rule is THE rule — no second copy to drift
+_effective_stream_dtype = P._effective_stream_dtype
+
+
+def route_prepared(prep: P.PreparedDesign, cfg: SessionConfig) -> RoutingDecision:
+    """The single routing decision ``verify`` executes and ``explain``
+    reports — both read the same prepared design, so they cannot drift."""
+    return _route_with_plan(prep, cfg)[0]
+
+
+def _route_with_plan(prep: P.PreparedDesign, cfg: SessionConfig):
+    """Route + the PartitionPlan backing a streamed decision (None for
+    the other modes), so ``verify`` can hand the exact planned buckets to
+    the executor instead of rebuilding them."""
+    pcfg = prep.cfg
+    full_bytes, peak_parts = prep.memory_bytes()
+    budget = pcfg.memory_budget_bytes
+    common = dict(
+        backend=pcfg.backend,
+        stream_dtype=_effective_stream_dtype(cfg),
+        modeled_full_bytes=full_bytes,
+        memory_budget_bytes=budget,
+        num_nodes=prep.num_nodes,
+        num_edges=prep.num_edges,
+    )
+    if prep.subgraphs is None:
+        reason = (
+            f"modeled {full_bytes} B fits the {budget} B budget unpartitioned"
+            if budget is not None
+            else "no partitioning requested (num_partitions <= 1, no budget)"
+        )
+        return RoutingDecision(
+            mode="full", k=1, num_buckets=0, buckets=(),
+            modeled_peak_bytes=full_bytes, reason=reason, **common,
+        ), None
+    k = prep.num_partitions
+    if not cfg.streaming:
+        return RoutingDecision(
+            mode="partitioned", k=k, num_buckets=0, buckets=(),
+            modeled_peak_bytes=peak_parts,
+            reason=f"k={k} partitions through the sequential loop "
+                   f"(streaming disabled)",
+            **common,
+        ), None
+    from repro.exec.plan import plan_from_subgraphs
+
+    plan = plan_from_subgraphs(
+        list(prep.subgraphs), prep.num_nodes, num_edges=prep.num_edges,
+        regrow=pcfg.regrow, partitioner=pcfg.partitioner, seed=pcfg.seed,
+        min_nodes=cfg.min_nodes, min_edges=cfg.min_edges,
+    )
+    if budget is not None and pcfg.num_partitions <= 1:
+        reason = (
+            f"modeled full-graph {full_bytes} B exceeds the {budget} B "
+            f"budget -> choose_k cut k={k}, streamed as "
+            f"{plan.num_buckets}-bucket packed launches"
+        )
+    else:
+        reason = (
+            f"k={k} partitions requested, streamed as "
+            f"{plan.num_buckets}-bucket packed launches"
+        )
+    return RoutingDecision(
+        mode="streamed", k=k, num_buckets=plan.num_buckets,
+        buckets=tuple((b.n_pad, b.e_pad) for b in plan.buckets),
+        modeled_peak_bytes=plan.peak_batch_memory_bytes(
+            pcfg.gnn, cfg.stream_capacity
+        ),
+        reason=reason, **common,
+    ), plan
+
+
+class Session:
+    """One stable front door over the whole verification stack."""
+
+    def __init__(self, params=None, config: Optional[SessionConfig] = None,
+                 **overrides):
+        if config is None:
+            config = SessionConfig(**overrides)
+        elif overrides:
+            config = dataclasses.replace(config, **overrides)
+        self.config = config
+        self._params = params
+        #: structural-hash result LRU: a resubmitted design under the same
+        #: config skips prepare + inference + verification entirely
+        self.results = ResultCache(config.cache_capacity)
+        self._service = None
+        self._closed = False
+        self._lock = threading.Lock()
+
+    # -- params lifecycle ----------------------------------------------------
+
+    @property
+    def params(self):
+        if self._params is None:
+            raise RuntimeError(
+                "session has no params: pass them to Session(params=...) or "
+                "call session.train() first"
+            )
+        return self._params
+
+    @property
+    def has_params(self) -> bool:
+        return self._params is not None
+
+    def train(self, dataset: Optional[str] = None, bits: int = 8, *,
+              epochs: int = 300, seed: Optional[int] = None) -> list:
+        """Train on a small design (the paper trains on 8-bit) and adopt
+        the params; returns the loss history."""
+        params, hist = P.train_model(
+            dataset or self.config.dataset, bits,
+            cfg=self.config.gnn, epochs=epochs,
+            seed=self.config.seed if seed is None else seed,
+        )
+        self.set_params(params)
+        return hist
+
+    def set_params(self, params) -> None:
+        """Adopt new params, invalidating every params-derived state: the
+        result LRU (its keys carry no params fingerprint, so stale entries
+        would be served as fresh) and the service engine (its runner holds
+        the old tree).  The executor pool needs no action — it is keyed on
+        params identity."""
+        with self._lock:
+            self._params = params
+            svc, self._service = self._service, None
+            self.results = ResultCache(self.config.cache_capacity)
+        if svc is not None:
+            svc.close()
+
+    def options(self, **overrides) -> "Session":
+        """A derived session: same params, config overridden.  Derived
+        sessions share the process-wide plan cache and executor pool, so
+        no jit state is duplicated — only the result LRU is fresh."""
+        return Session(self._params, dataclasses.replace(self.config, **overrides))
+
+    # -- design resolution ---------------------------------------------------
+
+    def _resolve_design(self, design):
+        """None (generate from config), an AIG/LUT object, AIGER bytes, or
+        an AIGER file path."""
+        if design is None or hasattr(design, "to_edge_graph"):
+            return design
+        from repro.io import aiger
+
+        if isinstance(design, (bytes, bytearray)):
+            return aiger.loads(bytes(design))
+        return aiger.load(design)      # str / PathLike
+
+    def prepare(self, design=None, *, dataset: Optional[str] = None,
+                bits: Optional[int] = None,
+                seed: Optional[int] = None) -> P.PreparedDesign:
+        """Host-side stage 1 for this session's config (features,
+        partitioning, re-growth)."""
+        pcfg = self.config.pipeline_config(dataset=dataset, bits=bits, seed=seed)
+        return P.prepare(pcfg, self._resolve_design(design))
+
+    # -- the router ----------------------------------------------------------
+
+    def explain(self, design=None, *, dataset: Optional[str] = None,
+                bits: Optional[int] = None,
+                seed: Optional[int] = None) -> RoutingDecision:
+        """The routing decision ``verify`` would take — chosen mode, k,
+        buckets, modeled peak bytes — without running inference.  Needs no
+        params (host-side only)."""
+        return route_prepared(
+            self.prepare(design, dataset=dataset, bits=bits, seed=seed),
+            self.config,
+        )
+
+    def _result_key(self, design, pcfg, verify: bool, signed):
+        if pcfg.batch != 1:
+            return None
+        if design is None:
+            h = f"gen:{pcfg.dataset}:{pcfg.bits}:{pcfg.seed}"
+        elif isinstance(design, A.AIG):
+            from repro.io import aiger
+
+            h = aiger.structural_hash(design)
+        else:
+            return None
+        return ResultCache.key(
+            h,
+            self.config.cache_key_part()
+            + (pcfg.dataset, pcfg.bits, pcfg.seed, verify, signed),
+        )
+
+    def _stream_executor(self):
+        from repro.exec.stream import shared_executor
+
+        return shared_executor(
+            self.params, self.config.backend,
+            capacity=self.config.stream_capacity,
+            prefetch=self.config.stream_prefetch,
+            stream_dtype=_effective_stream_dtype(self.config),
+            min_nodes=self.config.min_nodes,
+            min_edges=self.config.min_edges,
+        )
+
+    def verify(self, design=None, *, dataset: Optional[str] = None,
+               bits: Optional[int] = None, seed: Optional[int] = None,
+               verify: bool = True, signed: Optional[bool] = None,
+               use_cache: bool = True,
+               return_predictions: bool = False) -> SessionResult:
+        """Route one design through the stack and (optionally) verify it.
+
+        ``design`` is anything :meth:`_resolve_design` accepts; None
+        generates ``dataset``/``bits`` from the config.  ``use_cache=False``
+        bypasses the result LRU (probe tests; benchmarking).
+        """
+        t_start = time.perf_counter()
+        design = self._resolve_design(design)
+        pcfg = self.config.pipeline_config(dataset=dataset, bits=bits, seed=seed)
+        key = self._result_key(design, pcfg, verify, signed)
+        # cached entries are stored predictions-free, so a caller asking
+        # for predictions must fall through to a real run
+        if use_cache and key is not None and not return_predictions:
+            hit = self.results.get(key)
+            if hit is not None:
+                return dataclasses.replace(
+                    hit,
+                    cached=True,
+                    # fresh dicts: callers may mutate their result without
+                    # corrupting the cached copy or other hits
+                    plan_cache=dict(hit.plan_cache),
+                    exec_stats=dict(hit.exec_stats),
+                    timings={**hit.timings,
+                             "total": time.perf_counter() - t_start},
+                )
+        prep = P.prepare(pcfg, design)
+        decision, plan = _route_with_plan(prep, self.config)
+
+        t0 = time.perf_counter()
+        pc_before = PLAN_CACHE.snapshot()
+        if decision.mode == "full":
+            pred, exec_stats = P.infer(self.params, prep), {}
+        elif decision.mode == "partitioned":
+            pred, exec_stats = gnn.predict_partitioned_loop(
+                self.params, prep.subgraphs, prep.feats, prep.num_nodes,
+                pcfg.backend, stream_dtype=decision.stream_dtype,
+            ), {}
+        else:
+            pred, exec_stats = P.infer_streaming(
+                self.params, prep, executor=self._stream_executor(), plan=plan
+            )
+        pc_after = PLAN_CACHE.snapshot()
+        t_inf = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        acc = gnn.accuracy(pred, prep.labels)
+        verdict = P.verify_prepared(prep, pred, signed=signed) if verify else None
+        mem_full, mem_peak = prep.memory_bytes()
+        result = SessionResult(
+            name=getattr(prep.design, "name", f"{pcfg.dataset}:{pcfg.bits}"),
+            status=verdict.status if verdict is not None else "classified",
+            accuracy=acc,
+            core_accuracy=acc,
+            verdict=verdict,
+            cached=False,
+            num_nodes=prep.num_nodes,
+            num_edges=prep.num_edges,
+            peak_memory_bytes=mem_peak,
+            unpartitioned_memory_bytes=mem_full,
+            boundary_edge_frac=prep.boundary_edge_frac,
+            routing=decision,
+            timings={
+                **prep.timings,
+                "inference": t_inf,
+                "verify": time.perf_counter() - t0,
+                "total": time.perf_counter() - t_start,
+            },
+            plan_cache={
+                "builds": pc_after.builds - pc_before.builds,
+                "hits": pc_after.hits - pc_before.hits,
+            },
+            exec_stats=exec_stats,
+        )
+        if key is not None:
+            # cache a predictions-free copy with its own dicts: the LRU
+            # must stay O(results) not O(designs), and must not alias the
+            # mutable stats the caller receives
+            self.results.put(key, dataclasses.replace(
+                result, predictions=None, timings=dict(result.timings),
+                plan_cache=dict(result.plan_cache),
+                exec_stats=dict(result.exec_stats),
+            ))
+        if return_predictions:
+            result.predictions = pred
+        return result
+
+    # -- the async (service-batched) path ------------------------------------
+
+    def _service_engine(self):
+        with self._lock:
+            if self._closed:
+                # a fresh engine here would leak worker threads and could
+                # never know the closed engine's tickets anyway
+                raise RuntimeError(
+                    "session is closed: submit/poll/result need a live "
+                    "service engine"
+                )
+            if self._service is None:
+                from repro.service.server import VerificationService
+
+                self._service = VerificationService(
+                    self.params, self.config.service_config(), _warn=False
+                )
+            return self._service
+
+    def submit(self, design=None, *, dataset: Optional[str] = None,
+               bits: Optional[int] = None, seed: Optional[int] = None,
+               verify: bool = True, signed: Optional[bool] = None) -> int:
+        """Async verification through the batched service engine (shape
+        buckets, packed launches, overlap of prepare/device/verify across
+        requests); returns a ticket for :meth:`poll` / :meth:`result`.
+
+        AIGER bytes/paths are handed to the engine unparsed: parsing runs
+        on the prepare pool, so a malformed file yields a per-ticket
+        ``status="error"`` result instead of raising here."""
+        aiger_bytes = None
+        if design is not None and not hasattr(design, "to_edge_graph"):
+            from repro.io import aiger
+
+            aiger_bytes, design = aiger.source_bytes(design), None
+        return self._service_engine().submit(
+            design,
+            aiger_bytes=aiger_bytes,
+            dataset=self.config.dataset if dataset is None else dataset,
+            bits=self.config.bits if bits is None else bits,
+            seed=self.config.seed if seed is None else seed,
+            verify=verify,
+            signed=signed,
+        )
+
+    def poll(self, ticket: int):
+        """Non-blocking: the ServiceResult if finished, else None."""
+        return self._service_engine().poll(ticket)
+
+    def result(self, ticket: int, timeout: Optional[float] = None):
+        """Blocking retrieval of a submitted ticket."""
+        return self._service_engine().result(ticket, timeout)
+
+    # -- lifecycle / observability -------------------------------------------
+
+    def stats(self) -> dict:
+        out = {
+            "results": self.results.stats,
+            "plan_cache": PLAN_CACHE.snapshot(),
+        }
+        if self._service is not None:
+            out["service"] = self._service.stats()
+        return out
+
+    def close(self, timeout: Optional[float] = 300.0) -> None:
+        """Drain and stop the async engine.  Sync ``verify``/``explain``
+        keep working afterwards; ``submit``/``poll``/``result`` raise."""
+        with self._lock:
+            svc, self._service = self._service, None
+            self._closed = True
+        if svc is not None:
+            svc.close(timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

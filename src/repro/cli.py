@@ -1,0 +1,154 @@
+"""`repro`: the console entry point over :class:`repro.api.Session`.
+
+    repro verify design.aig               # train a small model, route, verify
+    repro verify csa:32 booth:16 --backend groot_fused --partitions 8
+    repro explain design.aig --budget-mb 64   # the routing decision only
+    repro serve --designs csa:8,csa:16 --repeat 2   # the batched service
+
+``verify``/``explain`` accept AIGER files (``.aig``/``.aag``) and
+``family:bits`` generator specs interchangeably.  ``explain`` needs no
+trained model — routing is host-side only.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Optional
+
+
+def _session_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("designs", nargs="+",
+                    help="AIGER files (.aig/.aag) or family:bits specs "
+                         "(csa:32, booth:16, mapped:8, fpga:8)")
+    ap.add_argument("--backend", default="ref",
+                    help="aggregation backend: ref | onehot | groot | "
+                         "groot_mxu | groot_fused")
+    ap.add_argument("--partitions", type=int, default=1)
+    ap.add_argument("--no-regrow", action="store_true")
+    ap.add_argument("--hops", type=int, default=1,
+                    help="re-growth depth (>= GNN layers -> bit-exact)")
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="device memory budget; the router partitions and "
+                         "streams designs that exceed it")
+    ap.add_argument("--stream-dtype", default=None,
+                    help='staged edge-stream dtype (e.g. "bfloat16")')
+
+
+def _make_session(args):
+    from repro.api import Session, SessionConfig
+
+    budget = None
+    if args.budget_mb is not None:
+        budget = int(args.budget_mb * 1e6)
+    return Session(config=SessionConfig(
+        backend=args.backend,
+        num_partitions=args.partitions,
+        regrow=not args.no_regrow,
+        regrow_hops=args.hops,
+        memory_budget_bytes=budget,
+        stream_dtype=args.stream_dtype,
+    ))
+
+
+def _resolve(spec: str):
+    """A design argument -> (design-or-None, dataset, bits) for the façade.
+
+    Raises SystemExit with a usable message on a bad spec, so callers can
+    validate every argument up front (before minutes of training).
+    """
+    if os.path.exists(spec) or spec.endswith((".aig", ".aag")):
+        if not os.path.exists(spec):
+            raise SystemExit(f"repro: AIGER file not found: {spec}")
+        return spec, None, None
+    fam, _, bits = spec.partition(":")
+    try:
+        return None, fam, int(bits or 8)
+    except ValueError:
+        raise SystemExit(
+            f"repro: bad design spec {spec!r} (want an .aig/.aag path or "
+            f"family:bits, e.g. csa:32)"
+        ) from None
+
+
+def _print_decision(label: str, d) -> None:
+    print(f"{label}: mode={d.mode} backend={d.backend} k={d.k} "
+          f"buckets={d.num_buckets}{list(d.buckets) if d.buckets else ''}")
+    print(f"    nodes={d.num_nodes} edges={d.num_edges} "
+          f"modeled full={d.modeled_full_bytes/1e6:.1f} MB "
+          f"peak={d.modeled_peak_bytes/1e6:.1f} MB "
+          f"budget={'-' if d.memory_budget_bytes is None else f'{d.memory_budget_bytes/1e6:.1f} MB'}")
+    print(f"    {d.reason}")
+
+
+def cmd_explain(args) -> int:
+    sess = _make_session(args)
+    for spec in args.designs:
+        design, dataset, bits = _resolve(spec)
+        _print_decision(spec, sess.explain(design, dataset=dataset, bits=bits))
+    return 0
+
+
+def cmd_verify(args) -> int:
+    # resolve every spec BEFORE training: a typo must fail in milliseconds,
+    # not after the (minutes-long) training run
+    resolved = [_resolve(spec) for spec in args.designs]
+    sess = _make_session(args)
+    print(f"training groot-gnn on csa {args.train_bits}b "
+          f"({args.epochs} epochs)...")
+    sess.train("csa", args.train_bits, epochs=args.epochs)
+    print(f"\n{'design':>24} {'route':>12} {'status':>13} {'acc':>7} "
+          f"{'nodes':>8} {'peak_MB':>8} {'total_s':>8}")
+    bad = 0
+    for design, dataset, bits in resolved:
+        r = sess.verify(design, dataset=dataset, bits=bits,
+                        verify=not args.no_verify)
+        bad += r.status in ("falsified", "error")
+        print(f"{r.name:>24} {r.routing.mode:>12} {r.status:>13} "
+              f"{r.accuracy:7.4f} {r.num_nodes:>8} "
+              f"{r.peak_memory_bytes/1e6:8.1f} {r.timings['total']:8.3f}")
+        if args.explain:
+            _print_decision("  routing", r.routing)
+    return 1 if bad else 0
+
+
+def main(argv: Optional[list] = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "serve":
+        # hand everything (flags included) to the service CLI untouched —
+        # argparse.REMAINDER cannot capture leading options
+        from repro.service.server import main as serve_main
+
+        serve_main(argv[1:])
+        return 0
+
+    ap = argparse.ArgumentParser(
+        prog="repro", description="GROOT verification stack (repro.api)"
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    v = sub.add_parser("verify", help="train a small model, route, verify")
+    _session_args(v)
+    v.add_argument("--train-bits", type=int, default=8)
+    v.add_argument("--epochs", type=int, default=300)
+    v.add_argument("--no-verify", action="store_true",
+                   help="classification only (skip adder extraction)")
+    v.add_argument("--explain", action="store_true",
+                   help="also print each design's routing decision")
+    v.set_defaults(fn=cmd_verify)
+
+    e = sub.add_parser("explain",
+                       help="print the routing decision without running")
+    _session_args(e)
+    e.set_defaults(fn=cmd_explain)
+
+    # listed for --help only; dispatched above before parsing
+    sub.add_parser("serve", help="run the batched verification service "
+                                 "(args pass through to repro.service.server)")
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

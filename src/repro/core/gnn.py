@@ -401,17 +401,25 @@ def predict_partitioned(
     prefetch: int = 1,
     stream_dtype: Optional[str] = None,
 ) -> np.ndarray:
-    """Per-partition inference; core-node predictions only (paper's flow).
+    """DEPRECATED: per-partition inference; core-node predictions only.
 
-    Each subgraph is an independent device-sized problem — this is the
-    memory-bounding property that lets a 1024-bit multiplier run on one
-    accelerator.  By default the partitions stream through the
-    ``repro.exec`` executor: same-bucket subgraphs are packed ``capacity``
-    per padded launch and the next batch's features are staged while the
-    device runs the current one.  ``streaming=False`` keeps the sequential
-    per-subgraph loop (one jit signature per subgraph shape) — bit-exact
-    with the streamed path on core rows; parity tests pin that down.
+    Use :class:`repro.api.Session` (whose router picks the streamed or
+    sequential path) or call
+    :func:`repro.exec.stream.stream_predict_partitioned` /
+    :func:`predict_partitioned_loop` directly.  Kept as a
+    behaviour-preserving shim: each subgraph is an independent
+    device-sized problem, streamed through the ``repro.exec`` executor by
+    default, or run through the sequential per-subgraph loop with
+    ``streaming=False`` — bit-exact on core rows either way.
     """
+    import warnings
+
+    warnings.warn(
+        "gnn.predict_partitioned is deprecated; use repro.api.Session "
+        "(or stream_predict_partitioned / predict_partitioned_loop)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     if streaming:
         from repro.exec.stream import stream_predict_partitioned
 

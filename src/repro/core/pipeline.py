@@ -3,8 +3,9 @@
     netlist/AIG -> features -> [partition -> re-growth] -> GNN inference
     -> XOR/MAJ classification -> algebraic verification
 
-The flow is exposed both as the one-shot :func:`run_pipeline` and as the
-three reusable stages it composes —
+The stable front door over this flow is :class:`repro.api.Session`
+(``run_pipeline`` survives as a deprecated shim over it).  The module
+exposes the three reusable stages the façade composes —
 
   :func:`prepare`          host-side: design gen/ingest, features,
                            partitioning + boundary re-growth
@@ -36,7 +37,37 @@ from repro.core.graph import EdgeGraph, batch_graphs
 from repro.core.partition import PARTITIONERS
 from repro.core.regrowth import Subgraph, extract_partitions, boundary_edge_fraction
 from repro.core.verify import VerifyResult, verify
-from repro.kernels.plan_cache import PLAN_CACHE
+
+
+def resolve_backend_alias(backend: Optional[str], aggregate: Optional[str],
+                          *, owner: str) -> str:
+    """Collapse the ``aggregate``/``backend`` naming split to ``backend``.
+
+    ``aggregate=`` (the old ``PipelineConfig`` spelling) keeps working as
+    a write-only alias: it warns, fills ``backend`` when that is unset,
+    and conflicts loudly instead of silently preferring one.  Returns the
+    resolved backend (default ``"ref"``).  Lives here (not ``repro.api``)
+    so the core layer never imports upward.
+    """
+    if aggregate is not None:
+        import warnings
+
+        warnings.warn(
+            f"{owner}(aggregate=...) is deprecated; the knob is named "
+            f"backend= everywhere now",
+            DeprecationWarning,
+            # resolve_backend_alias <- __post_init__ <- generated __init__
+            # <- the user's call site
+            stacklevel=4,
+        )
+        if backend is None:
+            backend = aggregate
+        elif backend != aggregate:
+            raise ValueError(
+                f"{owner}: backend={backend!r} and its deprecated alias "
+                f"aggregate={aggregate!r} disagree — pass only backend="
+            )
+    return "ref" if backend is None else backend
 
 
 @dataclasses.dataclass
@@ -50,7 +81,10 @@ class PipelineConfig:
                                   # >= gnn.num_layers -> partitioned == full
     partitioner: str = "multilevel"
     gnn: gnn.GNNConfig = dataclasses.field(default_factory=gnn.GNNConfig)
-    aggregate: str = "ref"   # "ref" | "groot" (Pallas kernel) | "onehot"
+    # aggregation backend: "ref" | "onehot" | "groot" | "groot_mxu" |
+    # "groot_fused" — the ONE name for the knob across every layer (the
+    # service config always called it backend).  None resolves to "ref".
+    backend: Optional[str] = None
     seed: int = 0
     # streaming-executor knobs (repro.exec).  ``memory_budget_bytes`` set
     # and num_partitions <= 1: prepare() derives the partition count from
@@ -62,6 +96,16 @@ class PipelineConfig:
     # the staged stream bytes; kernels accumulate f32).  None defers to
     # ``gnn.stream_dtype``.
     stream_dtype: Optional[str] = None
+    # deprecated write-only alias of ``backend`` (the old spelling);
+    # consumed and reset to None at construction so dataclasses.replace
+    # with backend= never sees a stale conflicting alias
+    aggregate: Optional[str] = None
+
+    def __post_init__(self):
+        self.backend = resolve_backend_alias(
+            self.backend, self.aggregate, owner="PipelineConfig"
+        )
+        self.aggregate = None
 
 
 @dataclasses.dataclass
@@ -285,7 +329,7 @@ def infer(params, prep: PreparedDesign, *, backend: Optional[str] = None) -> np.
     :func:`infer_streaming` exposes the executor's probe counters too.
     """
     if prep.subgraphs is None:
-        backend = backend or prep.cfg.aggregate
+        backend = backend or prep.cfg.backend
         return gnn.predict(
             params, prep.graph, prep.feats, backend=backend,
             stream_dtype=_effective_stream_dtype(prep.cfg),
@@ -307,6 +351,7 @@ def infer_streaming(
     *,
     backend: Optional[str] = None,
     executor=None,
+    plan=None,
 ) -> tuple[np.ndarray, dict]:
     """Partitioned inference through the streaming executor.
 
@@ -319,7 +364,7 @@ def infer_streaming(
     from repro.exec.stream import shared_executor
 
     assert prep.subgraphs, "infer_streaming needs a partitioned PreparedDesign"
-    backend = backend or prep.cfg.aggregate
+    backend = backend or prep.cfg.backend
     cfg = prep.cfg
     if executor is None:
         # reused per (params, backend): repeated partitioned runs hit the
@@ -329,11 +374,12 @@ def infer_streaming(
             prefetch=cfg.stream_prefetch,
             stream_dtype=_effective_stream_dtype(cfg),
         )
-    plan = plan_from_subgraphs(
-        list(prep.subgraphs), prep.num_nodes, num_edges=prep.num_edges,
-        regrow=cfg.regrow, partitioner=cfg.partitioner, seed=cfg.seed,
-        min_nodes=executor.min_nodes, min_edges=executor.min_edges,
-    )
+    if plan is None:
+        plan = plan_from_subgraphs(
+            list(prep.subgraphs), prep.num_nodes, num_edges=prep.num_edges,
+            regrow=cfg.regrow, partitioner=cfg.partitioner, seed=cfg.seed,
+            min_nodes=executor.min_nodes, min_edges=executor.min_edges,
+        )
     before = dataclasses.replace(executor.stats)
     pred = executor.run_plan(plan, prep.feats)
     stats = dataclasses.asdict(executor.stats.delta(before))
@@ -370,34 +416,37 @@ def verify_prepared(
 def run_pipeline(
     cfg: PipelineConfig, params, *, verify_result: bool = False
 ) -> PipelineResult:
-    """Inference + verification with a trained model (composes the stages)."""
-    prep = prepare(cfg)
-    t0 = time.perf_counter()
-    pc_before = PLAN_CACHE.snapshot()
-    if prep.subgraphs is None:
-        pred, exec_stats = infer(params, prep), {}
-    else:
-        pred, exec_stats = infer_streaming(params, prep)
-    pc_after = PLAN_CACHE.snapshot()
-    t_inf = time.perf_counter() - t0
-    mem_full, peak_mem = prep.memory_bytes()
-    acc = gnn.accuracy(pred, prep.labels)
-    verdict = verify_prepared(prep, pred) if verify_result else None
+    """DEPRECATED shim over :class:`repro.api.Session` (the one façade).
+
+    Behaviour-preserving: the session is configured field-for-field from
+    ``cfg`` (``SessionConfig.from_pipeline``) and its router takes the
+    same full/streamed path this function used to hard-code, with the
+    result LRU bypassed so every call really runs.
+    """
+    import warnings
+
+    warnings.warn(
+        "run_pipeline is deprecated; use repro.api.Session.verify",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.api import Session, SessionConfig
+
+    r = Session(params, SessionConfig.from_pipeline(cfg)).verify(
+        verify=verify_result, use_cache=False
+    )
     return PipelineResult(
-        accuracy=acc,
-        core_accuracy=acc,
-        peak_memory_bytes=peak_mem,
-        unpartitioned_memory_bytes=mem_full,
-        boundary_edge_frac=prep.boundary_edge_frac,
-        timings={**prep.timings, "inference": t_inf},
-        verdict=verdict,
-        num_nodes=prep.num_nodes,
-        num_edges=prep.num_edges,
-        plan_cache={
-            "builds": pc_after.builds - pc_before.builds,
-            "hits": pc_after.hits - pc_before.hits,
-        },
-        exec_stats=exec_stats,
+        accuracy=r.accuracy,
+        core_accuracy=r.core_accuracy,
+        peak_memory_bytes=r.peak_memory_bytes,
+        unpartitioned_memory_bytes=r.unpartitioned_memory_bytes,
+        boundary_edge_frac=r.boundary_edge_frac,
+        timings=r.timings,
+        verdict=r.verdict,
+        num_nodes=r.num_nodes,
+        num_edges=r.num_edges,
+        plan_cache=r.plan_cache,
+        exec_stats=r.exec_stats,
     )
 
 

@@ -265,16 +265,19 @@ _EXECUTOR_POOL_MAX = 8
 def shared_executor(
     params, backend: str, *, capacity: int = 2, prefetch: int = 1,
     stream_dtype: Optional[str] = None,
+    min_nodes: int = 64, min_edges: int = 128,
 ) -> StreamingExecutor:
     """The process-wide executor for (params identity, backend, knobs)."""
     if stream_dtype == "float32":
         stream_dtype = None   # numerically identical: share the executor
-    key = (id(params), backend, capacity, prefetch, stream_dtype)
+    key = (id(params), backend, capacity, prefetch, stream_dtype,
+           min_nodes, min_edges)
     hit = _EXECUTOR_POOL.get(key)
     if hit is not None and hit[0] is params:
         return hit[1]
     ex = StreamingExecutor(params, backend, capacity=capacity, prefetch=prefetch,
-                           stream_dtype=stream_dtype)
+                           stream_dtype=stream_dtype,
+                           min_nodes=min_nodes, min_edges=min_edges)
     if len(_EXECUTOR_POOL) >= _EXECUTOR_POOL_MAX:
         _EXECUTOR_POOL.clear()
     _EXECUTOR_POOL[key] = (params, ex)

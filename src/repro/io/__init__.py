@@ -1,2 +1,9 @@
 """Ingestion/serialization boundary: standard circuit formats -> repro AIGs."""
-from repro.io.aiger import dump, dumps, load, loads, structural_hash  # noqa: F401
+from repro.io.aiger import (  # noqa: F401
+    dump,
+    dumps,
+    load,
+    loads,
+    source_bytes,
+    structural_hash,
+)

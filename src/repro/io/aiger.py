@@ -308,6 +308,17 @@ def load(path) -> A.AIG:
     return loads(data, name=os.path.splitext(os.path.basename(str(path)))[0])
 
 
+def source_bytes(source) -> bytes:
+    """Raw AIGER bytes from raw bytes or a file path — the ONE
+    normalisation both the service's ``submit_aiger`` and the façade's
+    ``Session.submit`` use, so deferred (per-ticket-error) parsing always
+    sees identical input handling."""
+    if isinstance(source, (bytes, bytearray)):
+        return bytes(source)
+    with open(source, "rb") as f:
+        return f.read()
+
+
 # ---------------------------------------------------------------------------
 # Structural hashing (service-layer dedup key)
 # ---------------------------------------------------------------------------

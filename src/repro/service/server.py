@@ -18,11 +18,15 @@ server:
 
 Cache hits skip partitioning, inference, and verification entirely.
 
-CLI::
+CLI (the ``repro`` console entry point; ``python -m repro.service.server``
+still works)::
 
-    PYTHONPATH=src python -m repro.service.server \
-        --designs csa:8,csa:16,booth:8 --partitions 4 --repeat 2
-    PYTHONPATH=src python -m repro.service.server --aiger design.aig
+    repro serve --designs csa:8,csa:16,booth:8 --partitions 4 --repeat 2
+    repro serve --aiger design.aig
+
+NOTE: ``repro.api.Session`` is the public front door — it owns this
+engine behind ``session.submit()/poll()``.  Constructing
+``VerificationService`` directly still works but is deprecated.
 """
 from __future__ import annotations
 
@@ -68,10 +72,16 @@ class ServiceConfig:
     cache_capacity: int = 1024
     max_batch_requests: int = 16  # requests drained per device-worker cycle
     max_done_retained: int = 4096  # finished tickets kept pollable (FIFO evict)
+    # staged edge-stream dtype for the groot* backends (None/f32 is
+    # bit-exact; "bfloat16" halves staged stream bytes) — threaded through
+    # to the BucketRunner, and part of the result-cache key because it
+    # changes numerics
+    stream_dtype: Optional[str] = None
 
     def cache_key_part(self) -> tuple:
         return (
             self.num_partitions, self.regrow, self.partitioner, self.backend,
+            self.stream_dtype,
         )
 
 
@@ -106,9 +116,27 @@ class _Request:
 
 
 class VerificationService:
-    """Batched, cached verification over a trained GROOT model."""
+    """Batched, cached verification over a trained GROOT model.
 
-    def __init__(self, params, config: Optional[ServiceConfig] = None, **overrides):
+    DEPRECATED as a public entry point: :class:`repro.api.Session` is the
+    façade (``session.submit()/poll()`` is this engine behind one config);
+    the class keeps working as the service engine the session owns.
+    ``**overrides`` always apply on top of ``config`` when both are given
+    (via ``dataclasses.replace``), so a shared base config can be
+    specialised per instance.
+    """
+
+    def __init__(self, params, config: Optional[ServiceConfig] = None,
+                 _warn: bool = True, **overrides):
+        if _warn:
+            import warnings
+
+            warnings.warn(
+                "constructing VerificationService directly is deprecated; "
+                "use repro.api.Session (submit/poll)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         if config is None:
             config = ServiceConfig(**overrides)
         elif overrides:
@@ -125,6 +153,7 @@ class VerificationService:
             max_bucket_nodes=config.max_bucket_nodes,
             max_bucket_edges=config.max_bucket_edges,
             stream_capacity=config.stream_capacity,
+            stream_dtype=config.stream_dtype,
         )
         self._pool = ThreadPoolExecutor(
             max_workers=config.prepare_workers, thread_name_prefix="svc-prepare"
@@ -181,12 +210,9 @@ class VerificationService:
     def submit_aiger(self, source, *, verify: bool = True,
                      signed: Optional[bool] = None) -> int:
         """Submit an AIGER file (path) or raw AIGER bytes."""
-        if isinstance(source, (bytes, bytearray)):
-            data = bytes(source)
-        else:
-            with open(source, "rb") as f:
-                data = f.read()
-        return self.submit(aiger_bytes=data, verify=verify, signed=signed)
+        return self.submit(
+            aiger_bytes=aiger.source_bytes(source), verify=verify, signed=signed
+        )
 
     # -- retrieval API -------------------------------------------------------
 
@@ -273,8 +299,9 @@ class VerificationService:
                 num_partitions=self.config.num_partitions,
                 regrow=self.config.regrow,
                 partitioner=self.config.partitioner,
-                aggregate=self.config.backend,
+                backend=self.config.backend,
                 seed=req.seed,
+                stream_dtype=self.config.stream_dtype,
             )
             key = None
             if design is None or isinstance(design, A.AIG):
@@ -407,28 +434,32 @@ def main(argv=None):
     ap.add_argument("--epochs", type=int, default=300)
     args = ap.parse_args(argv)
 
-    print(f"training groot-gnn on csa {args.train_bits}b ({args.epochs} epochs)...")
-    params, _ = P.train_model("csa", args.train_bits, epochs=args.epochs)
+    # the CLI is a thin client of the façade: one Session owns the params,
+    # the batched engine, and every cache
+    from repro.api import Session, SessionConfig
 
-    svc = VerificationService(
-        params,
+    sess = Session(config=SessionConfig(
         num_partitions=args.partitions,
         regrow=not args.no_regrow,
         capacity=args.capacity,
         prepare_workers=args.workers,
         max_bucket_nodes=args.max_bucket_nodes,
-    )
+    ))
+    print(f"training groot-gnn on csa {args.train_bits}b ({args.epochs} epochs)...")
+    sess.train("csa", args.train_bits, epochs=args.epochs)
+
     t0 = time.perf_counter()
     results = []
-    with svc:
+    with sess:
         # rounds are sequential so repeat > 1 demonstrates cache hits
         for _ in range(args.repeat):
             tickets = [
-                svc.submit_design(fam, bits)
+                sess.submit(dataset=fam, bits=bits)
                 for fam, bits in _parse_designs(args.designs)
             ]
-            tickets += [svc.submit_aiger(path) for path in args.aiger]
-            results += [svc.result(t) for t in tickets]
+            tickets += [sess.submit(path) for path in args.aiger]
+            results += [sess.result(t) for t in tickets]
+        svc_stats = sess.stats()["service"]
     dt = time.perf_counter() - t0
     print(f"\n{'ticket':>6} {'design':>18} {'status':>13} {'acc':>7} "
           f"{'nodes':>7} {'cached':>6} {'total_s':>8}")
@@ -437,7 +468,7 @@ def main(argv=None):
               f"{r.num_nodes:>7} {str(r.cached):>6} {r.timings.get('total', 0):8.3f}")
         if r.error:
             print(f"       error: {r.error}")
-    s = svc.stats()
+    s = svc_stats
     print(f"\nserved {len(results)} requests in {dt:.2f}s "
           f"({len(results) / dt:.1f} req/s incl. compile)")
     print(f"jit compiles: {s['compile_count']}  device calls: {s['device_calls']}  "

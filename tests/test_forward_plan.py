@@ -260,6 +260,7 @@ def test_partitioned_predictions_int32_end_to_end():
     from repro.core.features import groot_features
     from repro.core.partition import PARTITIONERS
     from repro.core.regrowth import extract_partitions
+    from repro.exec.stream import stream_predict_partitioned
 
     d = A.csa_multiplier(8)
     g = d.to_edge_graph()
@@ -269,7 +270,7 @@ def test_partitioned_predictions_int32_end_to_end():
     part = PARTITIONERS["multilevel"](g, 2, seed=0)
     subs = extract_partitions(g, part, regrow=True, hops=2)
     loop = gnn.predict_partitioned_loop(params, subs, feats, g.num_nodes, "ref")
-    stream = gnn.predict_partitioned(params, subs, feats, g.num_nodes, "ref")
+    stream = stream_predict_partitioned(params, subs, feats, g.num_nodes, "ref")
     assert loop.dtype == np.int32
     assert stream.dtype == np.int32
     np.testing.assert_array_equal(loop, stream)

@@ -28,7 +28,7 @@ def trained_params_8b():
 
 def _run(params, backend, bits=8, partitions=1):
     cfg = P.PipelineConfig(
-        dataset="csa", bits=bits, num_partitions=partitions, aggregate=backend
+        dataset="csa", bits=bits, num_partitions=partitions, backend=backend
     )
     return P.run_pipeline(cfg, params, verify_result=True)
 

@@ -165,10 +165,10 @@ def test_partitioning_reduces_memory(trained_params):
 def test_kernel_backend_equivalence(trained_params):
     """groot Pallas backend and ref backend agree on predictions."""
     r_ref = P.run_pipeline(
-        P.PipelineConfig(dataset="csa", bits=8, aggregate="ref"), trained_params
+        P.PipelineConfig(dataset="csa", bits=8, backend="ref"), trained_params
     )
     for backend in ("groot", "groot_fused"):
-        cfg = P.PipelineConfig(dataset="csa", bits=8, aggregate=backend)
+        cfg = P.PipelineConfig(dataset="csa", bits=8, backend=backend)
         r = P.run_pipeline(cfg, trained_params)
         assert r.accuracy == r_ref.accuracy
 
