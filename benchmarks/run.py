@@ -3,11 +3,12 @@
     PYTHONPATH=src python -m benchmarks.run [--full] [--json]
 
 Default is the quick pass (CI-sized); --full reproduces the wider grids.
-``--json`` additionally writes one ``BENCH_<suite>.json`` per suite under
-``experiments/bench/`` — suite runtime, every table the suite saved
-(rows carry the peak-memory model / compile-count columns), and the
-process-wide plan-cache compile counters — so the bench trajectory
-accumulates machine-readable points run over run.
+``--json`` additionally writes one ``BENCH_<suite>.json`` per suite, both
+under ``experiments/bench/`` and at the repo root — suite runtime, every
+table the suite saved (rows carry the peak-memory model / compile-count
+columns), and an embedded ``repro.obs`` report (per-stage wall times from
+a suite-scoped tracer, the process-counter delta, plan-cache hit rate) —
+so the bench trajectory accumulates machine-readable points run over run.
 
 The multi-pod dry-run + roofline tables are separate entry points
 (python -m repro.launch.dryrun / python -m repro.roofline.report) since
@@ -19,6 +20,9 @@ import argparse
 import json
 import sys
 import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def main(argv=None):
@@ -43,6 +47,7 @@ def main(argv=None):
     )
     from benchmarks import common
     from repro.kernels.plan_cache import PLAN_CACHE
+    from repro.obs import REGISTRY, Tracer
 
     t0 = time.time()
     suites = [
@@ -67,16 +72,22 @@ def main(argv=None):
         print(f"\n#### {name} ####", flush=True)
         common.drain_tables()
         pc0 = PLAN_CACHE.snapshot()
+        reg0 = REGISTRY.snapshot()
+        tracer = Tracer()
         t_suite = time.time()
         err = None
         try:
-            fn(quick)
+            # every Session the suite builds (trace=False) emits its spans
+            # into this suite-scoped tracer via the active-tracer fallback
+            with tracer.activate():
+                fn(quick)
         except Exception as e:  # noqa: BLE001
             err = repr(e)
             failed.append((name, err))
             print(f"[FAIL] {name}: {e}")
         if args.json:
             pc1 = PLAN_CACHE.snapshot()
+            lookups = (pc1.hits - pc0.hits) + (pc1.builds - pc0.builds)
             common.ART.mkdir(parents=True, exist_ok=True)
             payload = {
                 "suite": key,
@@ -89,11 +100,19 @@ def main(argv=None):
                     "builds": pc1.builds - pc0.builds,
                     "hits": pc1.hits - pc0.hits,
                 },
+                "report": {
+                    "stages": tracer.summary(),
+                    "counters": REGISTRY.delta(reg0),
+                    "plan_cache_hit_rate": (
+                        (pc1.hits - pc0.hits) / lookups if lookups else 0.0
+                    ),
+                },
                 "tables": common.drain_tables(),
             }
-            path = common.ART / f"BENCH_{key}.json"
-            path.write_text(json.dumps(payload, indent=1))
-            print(f"[json] wrote {path}")
+            for path in (common.ART / f"BENCH_{key}.json",
+                         REPO_ROOT / f"BENCH_{key}.json"):
+                path.write_text(json.dumps(payload, indent=1))
+                print(f"[json] wrote {path}")
     print(f"\nbenchmarks done in {time.time()-t0:.1f}s")
     if failed:
         for name, err in failed:

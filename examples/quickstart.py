@@ -14,11 +14,15 @@ from repro.api import Session, SessionConfig
 ap = argparse.ArgumentParser()
 ap.add_argument("--quick", action="store_true",
                 help="small bits / few epochs (the CI fast-lane smoke test)")
+ap.add_argument("--trace", metavar="OUT.json", default=None,
+                help="record every verify below and write a Chrome-trace "
+                     "JSON (derived sessions share the base tracer)")
 args = ap.parse_args()
 BITS = 16 if args.quick else 32
 EPOCHS = 120 if args.quick else 300
 
-sess = Session(config=SessionConfig(dataset="csa", bits=BITS))
+sess = Session(config=SessionConfig(dataset="csa", bits=BITS,
+                                    trace=bool(args.trace)))
 
 print("1) training GraphSAGE on the 8-bit CSA multiplier (paper's setup)...")
 hist = sess.train("csa", 8, epochs=EPOCHS)
@@ -58,3 +62,9 @@ r_k = sess.options(backend="groot_fused").verify(
     bits=8 if args.quick else 16, verify=False
 )
 print(f"   accuracy {r_k.accuracy:.2%} (HD/LD degree-bucketed kernel path)")
+
+if args.trace:
+    sess.save_trace(args.trace)
+    rep = sess.report()
+    print(f"\n7) observability: {rep!r}")
+    print(f"   trace written to {args.trace}")

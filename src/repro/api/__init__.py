@@ -26,8 +26,10 @@ from repro.api.session import (  # noqa: F401
     SessionResult,
     route_prepared,
 )
+from repro.obs import Report  # noqa: F401 — Session.report()'s return type
 
 __all__ = [
+    "Report",
     "RoutingDecision",
     "Session",
     "SessionConfig",

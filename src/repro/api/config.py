@@ -81,6 +81,14 @@ class SessionConfig:
     max_batch_requests: int = 16
     max_done_retained: int = 4096
 
+    # -- observability (repro.obs) ------------------------------------------
+    #: record a span tracer around every ``verify()`` (Chrome-trace
+    #: exportable via ``Session.save_trace`` / ``SessionResult.trace``).
+    #: Off by default: the disabled path is the no-op tracer, so kernels
+    #: and the prefetch loop pay nothing.  Deliberately NOT part of
+    #: ``cache_key_part`` — tracing never changes results.
+    trace: bool = False
+
     #: deprecated write-only alias of ``backend`` — consumed (and reset to
     #: None) at construction so ``dataclasses.replace(cfg, backend=...)``
     #: never sees a stale conflicting alias

@@ -26,7 +26,9 @@ Legacy front doors (`run_pipeline`, `VerificationService`,
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import datetime
 import threading
 import time
 from typing import Optional
@@ -39,6 +41,15 @@ from repro.core import gnn
 from repro.core import pipeline as P
 from repro.core.verify import VerifyResult
 from repro.kernels.plan_cache import PLAN_CACHE
+from repro.obs import (
+    REGISTRY,
+    MetricsRegistry,
+    Report,
+    TraceHandle,
+    Tracer,
+    current_tracer,
+    fold_into,
+)
 from repro.service.cache import ResultCache
 
 
@@ -82,6 +93,9 @@ class SessionResult:
     plan_cache: dict                  # structural-cache deltas for this call
     exec_stats: dict                  # streamed mode: executor probe deltas
     predictions: Optional[np.ndarray] = None   # verify(return_predictions=True)
+    #: per-verify span subtree (config.trace=True; None on cache hits and
+    #: untraced sessions) — ``result.trace.save(path)`` writes Chrome JSON
+    trace: Optional[TraceHandle] = None
 
 
 # SessionConfig exposes the same (stream_dtype, gnn) attributes, so the
@@ -157,17 +171,33 @@ def _route_with_plan(prep: P.PreparedDesign, cfg: SessionConfig):
     ), plan
 
 
+class _SessionObs:
+    """One session's observability state: a private metrics registry, an
+    optional tracer, and the baselines report() deltas against."""
+
+    def __init__(self, trace: bool):
+        self.metrics = MetricsRegistry()
+        self.tracer: Optional[Tracer] = Tracer() if trace else None
+        # deltas in report() are measured from session creation
+        self.registry_baseline = REGISTRY.snapshot()
+        self.plan_cache_baseline = PLAN_CACHE.snapshot()
+        self.exec_totals: dict = {}
+
+
 class Session:
     """One stable front door over the whole verification stack."""
 
     def __init__(self, params=None, config: Optional[SessionConfig] = None,
-                 **overrides):
+                 _obs: Optional[_SessionObs] = None, **overrides):
         if config is None:
             config = SessionConfig(**overrides)
         elif overrides:
             config = dataclasses.replace(config, **overrides)
         self.config = config
         self._params = params
+        #: tracing + metrics state (``_obs`` lets :meth:`options` share the
+        #: parent's, so a family of derived sessions traces one timeline)
+        self.obs = _obs if _obs is not None else _SessionObs(config.trace)
         #: structural-hash result LRU: a resubmitted design under the same
         #: config skips prepare + inference + verification entirely
         self.results = ResultCache(config.cache_capacity)
@@ -218,8 +248,13 @@ class Session:
     def options(self, **overrides) -> "Session":
         """A derived session: same params, config overridden.  Derived
         sessions share the process-wide plan cache and executor pool, so
-        no jit state is duplicated — only the result LRU is fresh."""
-        return Session(self._params, dataclasses.replace(self.config, **overrides))
+        no jit state is duplicated — only the result LRU is fresh.  Obs
+        state (tracer + metrics) is shared too, so a family of derived
+        sessions records one timeline — unless the override flips the
+        trace flag, which gets fresh obs matching the new flag."""
+        cfg = dataclasses.replace(self.config, **overrides)
+        obs = self.obs if cfg.trace == self.config.trace else None
+        return Session(self._params, cfg, _obs=obs)
 
     # -- design resolution ---------------------------------------------------
 
@@ -296,83 +331,142 @@ class Session:
         bypasses the result LRU (probe tests; benchmarking).
         """
         t_start = time.perf_counter()
-        design = self._resolve_design(design)
-        pcfg = self.config.pipeline_config(dataset=dataset, bits=bits, seed=seed)
-        key = self._result_key(design, pcfg, verify, signed)
-        # cached entries are stored predictions-free, so a caller asking
-        # for predictions must fall through to a real run
-        if use_cache and key is not None and not return_predictions:
-            hit = self.results.get(key)
-            if hit is not None:
-                return dataclasses.replace(
-                    hit,
-                    cached=True,
-                    # fresh dicts: callers may mutate their result without
-                    # corrupting the cached copy or other hits
-                    plan_cache=dict(hit.plan_cache),
-                    exec_stats=dict(hit.exec_stats),
-                    timings={**hit.timings,
-                             "total": time.perf_counter() - t_start},
-                )
-        prep = P.prepare(pcfg, design)
-        decision, plan = _route_with_plan(prep, self.config)
-
-        t0 = time.perf_counter()
-        pc_before = PLAN_CACHE.snapshot()
-        if decision.mode == "full":
-            pred, exec_stats = P.infer(self.params, prep), {}
-        elif decision.mode == "partitioned":
-            pred, exec_stats = gnn.predict_partitioned_loop(
-                self.params, prep.subgraphs, prep.feats, prep.num_nodes,
-                pcfg.backend, stream_dtype=decision.stream_dtype,
-            ), {}
-        else:
-            pred, exec_stats = P.infer_streaming(
-                self.params, prep, executor=self._stream_executor(), plan=plan
-            )
-        pc_after = PLAN_CACHE.snapshot()
-        t_inf = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        acc = gnn.accuracy(pred, prep.labels)
-        verdict = P.verify_prepared(prep, pred, signed=signed) if verify else None
-        mem_full, mem_peak = prep.memory_bytes()
-        result = SessionResult(
-            name=getattr(prep.design, "name", f"{pcfg.dataset}:{pcfg.bits}"),
-            status=verdict.status if verdict is not None else "classified",
-            accuracy=acc,
-            core_accuracy=acc,
-            verdict=verdict,
-            cached=False,
-            num_nodes=prep.num_nodes,
-            num_edges=prep.num_edges,
-            peak_memory_bytes=mem_peak,
-            unpartitioned_memory_bytes=mem_full,
-            boundary_edge_frac=prep.boundary_edge_frac,
-            routing=decision,
-            timings={
-                **prep.timings,
-                "inference": t_inf,
-                "verify": time.perf_counter() - t0,
-                "total": time.perf_counter() - t_start,
-            },
-            plan_cache={
-                "builds": pc_after.builds - pc_before.builds,
-                "hits": pc_after.hits - pc_before.hits,
-            },
-            exec_stats=exec_stats,
+        met = self.obs.metrics
+        met.counter("session.verifies").inc()
+        # with our own tracer: activate it (and restore whatever was
+        # active after); without: nullcontext, so a surrounding tracer —
+        # e.g. the benchmark harness's — still receives every span below
+        activate = (
+            self.obs.tracer.activate()
+            if self.obs.tracer is not None
+            else contextlib.nullcontext()
         )
-        if key is not None:
-            # cache a predictions-free copy with its own dicts: the LRU
-            # must stay O(results) not O(designs), and must not alias the
-            # mutable stats the caller receives
-            self.results.put(key, dataclasses.replace(
-                result, predictions=None, timings=dict(result.timings),
-                plan_cache=dict(result.plan_cache),
-                exec_stats=dict(result.exec_stats),
-            ))
-        if return_predictions:
-            result.predictions = pred
+        with activate:
+            tracer = self.obs.tracer or current_tracer()
+            with tracer.span("session.verify") as root:
+                with tracer.span("parse"):
+                    design = self._resolve_design(design)
+                    pcfg = self.config.pipeline_config(
+                        dataset=dataset, bits=bits, seed=seed
+                    )
+                    key = self._result_key(design, pcfg, verify, signed)
+                    # cached entries are stored predictions-free, so a
+                    # caller asking for predictions must fall through to a
+                    # real run
+                    hit = None
+                    if use_cache and key is not None and not return_predictions:
+                        hit = self.results.get(key)
+                if hit is not None:
+                    met.counter("session.cache_hits").inc()
+                    root.set(cached=True)
+                    return dataclasses.replace(
+                        hit,
+                        cached=True,
+                        # fresh dicts: callers may mutate their result
+                        # without corrupting the cached copy or other hits
+                        plan_cache=dict(hit.plan_cache),
+                        exec_stats=dict(hit.exec_stats),
+                        timings={**hit.timings,
+                                 "total": time.perf_counter() - t_start},
+                    )
+                with tracer.span("plan") as plan_sp:
+                    prep = P.prepare(pcfg, design)
+                    decision, plan = _route_with_plan(prep, self.config)
+                    plan_sp.set(mode=decision.mode, k=decision.k)
+                met.counter(f"session.route.{decision.mode}").inc()
+                met.histogram("session.prepare_s").observe(
+                    sum(prep.timings.values())
+                )
+                root.set(
+                    mode=decision.mode, design=getattr(prep.design, "name", "?")
+                )
+
+                t0 = time.perf_counter()
+                pc_before = PLAN_CACHE.snapshot()
+                with tracer.span("execute", mode=decision.mode):
+                    if decision.mode == "full":
+                        pred, exec_stats = P.infer(self.params, prep), {}
+                    elif decision.mode == "partitioned":
+                        pred, exec_stats = gnn.predict_partitioned_loop(
+                            self.params, prep.subgraphs, prep.feats,
+                            prep.num_nodes, pcfg.backend,
+                            stream_dtype=decision.stream_dtype,
+                        ), {}
+                    else:
+                        pred, exec_stats = P.infer_streaming(
+                            self.params, prep,
+                            executor=self._stream_executor(), plan=plan,
+                        )
+                pc_after = PLAN_CACHE.snapshot()
+                t_inf = time.perf_counter() - t0
+                met.histogram("session.infer_s").observe(t_inf)
+                if exec_stats:
+                    # per-run executor stats accumulate into the session
+                    # registry (ints -> exec.* counters, timings ->
+                    # histograms) and the raw totals report() exposes
+                    fold_into(met, "exec", exec_stats)
+                    for k_, v_ in exec_stats.items():
+                        if isinstance(v_, (int, float)) and not isinstance(v_, bool):
+                            self.obs.exec_totals[k_] = (
+                                self.obs.exec_totals.get(k_, 0) + v_
+                            )
+
+                with tracer.span("verdict"):
+                    t0 = time.perf_counter()
+                    acc = gnn.accuracy(pred, prep.labels)
+                    verdict = (
+                        P.verify_prepared(prep, pred, signed=signed)
+                        if verify else None
+                    )
+                    t_verify = time.perf_counter() - t0
+                    met.histogram("session.verify_s").observe(t_verify)
+                    mem_full, mem_peak = prep.memory_bytes()
+                    result = SessionResult(
+                        name=getattr(
+                            prep.design, "name", f"{pcfg.dataset}:{pcfg.bits}"
+                        ),
+                        status=(
+                            verdict.status if verdict is not None
+                            else "classified"
+                        ),
+                        accuracy=acc,
+                        core_accuracy=acc,
+                        verdict=verdict,
+                        cached=False,
+                        num_nodes=prep.num_nodes,
+                        num_edges=prep.num_edges,
+                        peak_memory_bytes=mem_peak,
+                        unpartitioned_memory_bytes=mem_full,
+                        boundary_edge_frac=prep.boundary_edge_frac,
+                        routing=decision,
+                        timings={
+                            **prep.timings,
+                            "inference": t_inf,
+                            "verify": t_verify,
+                            "total": time.perf_counter() - t_start,
+                        },
+                        plan_cache={
+                            "builds": pc_after.builds - pc_before.builds,
+                            "hits": pc_after.hits - pc_before.hits,
+                        },
+                        exec_stats=exec_stats,
+                    )
+                    if key is not None:
+                        # cache a predictions-free, trace-free copy with
+                        # its own dicts: the LRU must stay O(results) not
+                        # O(designs), and must not alias the mutable stats
+                        # (or pin the span tree) the caller receives
+                        self.results.put(key, dataclasses.replace(
+                            result, predictions=None, trace=None,
+                            timings=dict(result.timings),
+                            plan_cache=dict(result.plan_cache),
+                            exec_stats=dict(result.exec_stats),
+                        ))
+                    if return_predictions:
+                        result.predictions = pred
+        met.histogram("session.total_s").observe(time.perf_counter() - t_start)
+        if self.obs.tracer is not None and root.span_id is not None:
+            result.trace = TraceHandle(self.obs.tracer, root.span_id)
         return result
 
     # -- the async (service-batched) path ------------------------------------
@@ -390,7 +484,8 @@ class Session:
                 from repro.service.server import VerificationService
 
                 self._service = VerificationService(
-                    self.params, self.config.service_config(), _warn=False
+                    self.params, self.config.service_config(), _warn=False,
+                    metrics=self.obs.metrics,
                 )
             return self._service
 
@@ -437,6 +532,63 @@ class Session:
         if self._service is not None:
             out["service"] = self._service.stats()
         return out
+
+    def report(self) -> Report:
+        """One snapshot answering "where did the time go" for every route
+        this session ran: its own counters/histograms, process-registry
+        movement since creation (kernel probes, jit traces, staged bytes),
+        plan/result cache rates, scheduler + executor stats, and the span
+        summary when tracing is on."""
+        pc, base = PLAN_CACHE.snapshot(), self.obs.plan_cache_baseline
+        builds = pc.builds - base.builds
+        hits = pc.hits - base.hits
+        misses = pc.misses - base.misses
+        plan_cache = {
+            "builds": builds,
+            "hits": hits,
+            "misses": misses,
+            "evictions": pc.evictions - base.evictions,
+            "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+        }
+        rc = self.results.stats
+        scheduler = None
+        if self._service is not None:
+            s = self._service.scheduler.stats()
+            scheduler = {
+                "compile_count": s.compile_count,
+                "run_count": s.run_count,
+                "buckets": [(b.n_pad, b.e_pad) for b in s.buckets],
+                "items_run": s.items_run,
+                "streamed_items": s.streamed_items,
+            }
+        return Report(
+            created=datetime.datetime.now(datetime.timezone.utc).isoformat(
+                timespec="seconds"
+            ),
+            session=self.obs.metrics.snapshot(),
+            process=REGISTRY.delta(self.obs.registry_baseline),
+            plan_cache=plan_cache,
+            results_cache={
+                "hits": rc.hits, "misses": rc.misses,
+                "evictions": rc.evictions, "hit_rate": rc.hit_rate,
+            },
+            scheduler=scheduler,
+            exec=dict(self.obs.exec_totals) or None,
+            spans=(
+                self.obs.tracer.summary()
+                if self.obs.tracer is not None else None
+            ),
+        )
+
+    def save_trace(self, path) -> None:
+        """Write the session's full span timeline as Chrome-trace JSON
+        (``chrome://tracing`` / Perfetto loadable)."""
+        if self.obs.tracer is None:
+            raise RuntimeError(
+                "tracing is off: construct the session with "
+                "SessionConfig(trace=True)"
+            )
+        self.obs.tracer.save(path)
 
     def close(self, timeout: Optional[float] = 300.0) -> None:
         """Drain and stop the async engine.  Sync ``verify``/``explain``

@@ -48,6 +48,7 @@ def _make_session(args):
         regrow_hops=args.hops,
         memory_budget_bytes=budget,
         stream_dtype=args.stream_dtype,
+        trace=bool(getattr(args, "trace", None)),
     ))
 
 
@@ -109,6 +110,9 @@ def cmd_verify(args) -> int:
               f"{r.peak_memory_bytes/1e6:8.1f} {r.timings['total']:8.3f}")
         if args.explain:
             _print_decision("  routing", r.routing)
+    if args.trace:
+        sess.save_trace(args.trace)
+        print(f"\ntrace written to {args.trace}")
     return 1 if bad else 0
 
 
@@ -135,6 +139,10 @@ def main(argv: Optional[list] = None) -> int:
                    help="classification only (skip adder extraction)")
     v.add_argument("--explain", action="store_true",
                    help="also print each design's routing decision")
+    v.add_argument("--trace", metavar="OUT.json", default=None,
+                   help="record spans for every verify and write a "
+                        "Chrome-trace JSON (open in chrome://tracing "
+                        "or Perfetto)")
     v.set_defaults(fn=cmd_verify)
 
     e = sub.add_parser("explain",

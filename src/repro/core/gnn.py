@@ -29,6 +29,7 @@ import numpy as np
 from repro.core import aig as A
 from repro.core.graph import EdgeGraph
 from repro.core.regrowth import Subgraph
+from repro.obs import REGISTRY, span
 from repro.training import optimizer as opt
 
 
@@ -140,6 +141,10 @@ def forward(
         SPMD a per-edge gather of the (N,) norm array forces a 0.7 GB
         all-gather per group, measured in §Perf).
     """
+    # Executes at trace time only (the body of every jitted caller —
+    # _predict, the runner's _fwd — runs once per compilation), so this is
+    # the process-wide compile probe all three routes share.
+    REGISTRY.counter("gnn.forward_traces").inc()
     one = jnp.ones_like(edge_dst, dtype=x.dtype)
     w_neg = edge_inv.astype(x.dtype) if edge_inv is not None else jnp.zeros_like(one)
     w_pos = 1.0 - w_neg
@@ -374,19 +379,26 @@ def predict(
     g = design.to_edge_graph() if hasattr(design, "to_edge_graph") else design
     inv = None if g.edge_inv is None else jnp.asarray(g.edge_inv)
     slot = None if g.edge_slot is None else jnp.asarray(g.edge_slot)
-    return np.asarray(
-        _predict(
-            params,
-            jnp.asarray(features),
-            jnp.asarray(g.edge_src),
-            jnp.asarray(g.edge_dst),
-            inv,
-            slot,
-            g.num_nodes,
-            _make_agg(g, backend),
-            stream_dtype,
-        )
+    feats = np.asarray(features)
+    # staged h2d bytes: features + the edge index/annotation arrays
+    REGISTRY.counter("gnn.bytes_staged").inc(
+        feats.nbytes + 2 * g.edge_src.nbytes + 2 * g.edge_dst.nbytes
     )
+    with span("gnn.predict", backend=backend, nodes=g.num_nodes):
+        REGISTRY.counter("gnn.predicts").inc()
+        return np.asarray(
+            _predict(
+                params,
+                jnp.asarray(feats),
+                jnp.asarray(g.edge_src),
+                jnp.asarray(g.edge_dst),
+                inv,
+                slot,
+                g.num_nodes,
+                _make_agg(g, backend),
+                stream_dtype,
+            )
+        )
 
 
 def predict_partitioned(
@@ -455,6 +467,10 @@ def predict_partitioned_loop(
         feats = jnp.asarray(features[sg.global_ids])
         inv = None if sg.edge_inv is None else jnp.asarray(sg.edge_inv)
         slot = None if sg.edge_slot is None else jnp.asarray(sg.edge_slot)
+        REGISTRY.counter("gnn.loop_launches").inc()
+        REGISTRY.counter("gnn.bytes_staged").inc(
+            int(feats.nbytes) + 2 * sg.edge_src.nbytes + 2 * sg.edge_dst.nbytes
+        )
         pred = _predict(
             params,
             feats,

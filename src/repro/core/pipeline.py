@@ -37,6 +37,7 @@ from repro.core.graph import EdgeGraph, batch_graphs
 from repro.core.partition import PARTITIONERS
 from repro.core.regrowth import Subgraph, extract_partitions, boundary_edge_fraction
 from repro.core.verify import VerifyResult, verify
+from repro.obs import REGISTRY, span
 
 
 def resolve_backend_alias(backend: Optional[str], aggregate: Optional[str],
@@ -131,6 +132,9 @@ class PipelineResult:
     # modeled bytes of the largest capacity-slot launch — the quantity
     # that must fit the device budget), chosen_k.
     exec_stats: dict = dataclasses.field(default_factory=dict)
+    # per-verify span subtree (repro.obs.TraceHandle) when the session
+    # that produced this result ran with SessionConfig(trace=True)
+    trace: Optional[object] = None
 
 
 def memory_model_bytes(
@@ -257,18 +261,20 @@ def prepare(cfg: PipelineConfig, design=None) -> PreparedDesign:
     are then only used for verification metadata downstream.
     """
     t0 = time.perf_counter()
-    if design is None:
-        design = A.make_design(cfg.dataset, cfg.bits, seed=cfg.seed)
-    labels = design.label
-    feats = groot_features(design)
-    g1 = design.to_edge_graph()
-    if cfg.batch > 1:
-        g = batch_graphs([g1] * cfg.batch)
-        feats = np.tile(feats, (cfg.batch, 1))
-        labels = np.tile(labels, cfg.batch)
-    else:
-        g = g1
+    with span("prepare.features"):
+        if design is None:
+            design = A.make_design(cfg.dataset, cfg.bits, seed=cfg.seed)
+        labels = design.label
+        feats = groot_features(design)
+        g1 = design.to_edge_graph()
+        if cfg.batch > 1:
+            g = batch_graphs([g1] * cfg.batch)
+            feats = np.tile(feats, (cfg.batch, 1))
+            labels = np.tile(labels, cfg.batch)
+        else:
+            g = g1
     t_gen = time.perf_counter() - t0
+    REGISTRY.counter("pipeline.prepares").inc()
 
     t0 = time.perf_counter()
     k = cfg.num_partitions
@@ -293,22 +299,25 @@ def prepare(cfg: PipelineConfig, design=None) -> PreparedDesign:
     if k <= 1:
         subs, bfrac, t_part = None, 0.0, 0.0
     else:
-        part, subs = _cut(k)
-        if budgeted and subs:
-            # the estimate can undershoot real halo growth: validate the
-            # BUILT plan's packed peak and re-split finer until it fits
-            from repro.exec.plan import plan_from_subgraphs
+        with span("prepare.partition", k=k, partitioner=cfg.partitioner) as sp:
+            part, subs = _cut(k)
+            if budgeted and subs:
+                # the estimate can undershoot real halo growth: validate the
+                # BUILT plan's packed peak and re-split finer until it fits
+                from repro.exec.plan import plan_from_subgraphs
 
-            while k < g.num_nodes and plan_from_subgraphs(
-                subs, g.num_nodes
-            ).peak_batch_memory_bytes(
-                cfg.gnn, cfg.stream_capacity
-            ) > cfg.memory_budget_bytes:
-                k *= 2
-                part, subs = _cut(k)
-        bfrac = boundary_edge_fraction(g, part)
-        if not subs:  # empty graph: fall back to the unpartitioned path
-            subs = None
+                while k < g.num_nodes and plan_from_subgraphs(
+                    subs, g.num_nodes
+                ).peak_batch_memory_bytes(
+                    cfg.gnn, cfg.stream_capacity
+                ) > cfg.memory_budget_bytes:
+                    k *= 2
+                    part, subs = _cut(k)
+            bfrac = boundary_edge_fraction(g, part)
+            if not subs:  # empty graph: fall back to the unpartitioned path
+                subs = None
+            sp.set(final_k=len(subs) if subs else 1)
+        REGISTRY.counter("pipeline.partition_cuts").inc()
         t_part = time.perf_counter() - t0
     return PreparedDesign(
         cfg=cfg,
@@ -404,13 +413,15 @@ def verify_prepared(
     bits = prep.design.n_pi // 2
     if signed is None:
         signed = prep.cfg.dataset == "booth" or prep.design.name.startswith("booth")
-    return verify(
-        prep.design,
-        pred[: prep.design.num_nodes],
-        bits=bits,
-        signed=signed,
-        simulate=bits <= 64,
-    )
+    with span("pipeline.verify_prepared", bits=bits):
+        REGISTRY.counter("pipeline.verifications").inc()
+        return verify(
+            prep.design,
+            pred[: prep.design.num_nodes],
+            bits=bits,
+            signed=signed,
+            simulate=bits <= 64,
+        )
 
 
 def run_pipeline(
@@ -447,6 +458,7 @@ def run_pipeline(
         num_edges=r.num_edges,
         plan_cache=r.plan_cache,
         exec_stats=r.exec_stats,
+        trace=r.trace,
     )
 
 

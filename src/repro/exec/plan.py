@@ -34,6 +34,7 @@ from repro.core.partition import PARTITIONERS
 from repro.core.regrowth import Subgraph, boundary_edge_fraction, extract_partitions
 from repro.kernels import ops
 from repro.kernels.plan_cache import PlanCache, graph_key
+from repro.obs import REGISTRY, span
 from repro.service.bucketing import BucketShape
 
 #: Dedicated cache for execution plans, NOT the kernel-layer PLAN_CACHE:
@@ -183,20 +184,22 @@ def build_partition_plan(
     """
 
     def _build() -> PartitionPlan:
-        part = PARTITIONERS[partitioner](graph, k, seed=seed)
-        bfrac = boundary_edge_fraction(graph, part) if part.size else 0.0
-        subs = extract_partitions(graph, part, regrow=regrow, hops=hops)
-        plan = plan_from_subgraphs(
-            subs,
-            graph.num_nodes,
-            num_edges=graph.num_edges,
-            regrow=regrow,
-            partitioner=partitioner,
-            seed=seed,
-            min_nodes=min_nodes,
-            min_edges=min_edges,
-        )
-        return dataclasses.replace(plan, k=k, boundary_edge_frac=bfrac)
+        with span("exec.plan_build", k=k, partitioner=partitioner):
+            REGISTRY.counter("exec.plan_builds").inc()
+            part = PARTITIONERS[partitioner](graph, k, seed=seed)
+            bfrac = boundary_edge_fraction(graph, part) if part.size else 0.0
+            subs = extract_partitions(graph, part, regrow=regrow, hops=hops)
+            plan = plan_from_subgraphs(
+                subs,
+                graph.num_nodes,
+                num_edges=graph.num_edges,
+                regrow=regrow,
+                partitioner=partitioner,
+                seed=seed,
+                min_nodes=min_nodes,
+                min_edges=min_edges,
+            )
+            return dataclasses.replace(plan, k=k, boundary_edge_frac=bfrac)
 
     if not use_cache:
         return _build()
@@ -208,6 +211,7 @@ def build_partition_plan(
     )
     cached = EXEC_PLAN_CACHE.peek(key)
     if cached is not None:
+        REGISTRY.counter("exec.plan_cache_hits").inc()
         return cached
     return EXEC_PLAN_CACHE.add(key, _build())
 

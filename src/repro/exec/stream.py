@@ -39,6 +39,7 @@ from repro.core.graph import EdgeGraph
 from repro.core.regrowth import Subgraph
 from repro.exec.packing import PackedBatch, pack_partitions, scatter_core_predictions
 from repro.exec.plan import PartitionPlan, build_partition_plan, plan_from_subgraphs
+from repro.obs import REGISTRY, current_tracer, span
 from repro.service.scheduler import BucketRunner
 
 
@@ -144,62 +145,81 @@ class StreamingExecutor:
         self.buckets_seen.update(plan.buckets)
         out = np.zeros(plan.num_nodes, dtype=np.int32)
         compiles_before = self.runner.compile_count
+        tracer = current_tracer()
 
-        if self.prefetch == 0 or len(schedule) <= 1:
-            # synchronous fallback (also the degenerate 0/1-batch case)
-            for shape, indices in schedule:
-                batch = self._pack_timed(plan, indices, features, shape)
-                self._launch(batch, out)
-        else:
-            q: queue.Queue = queue.Queue(maxsize=self.prefetch)
-            stop = threading.Event()      # consumer died: unblock producer
+        with tracer.span(
+            "exec.stream",
+            partitions=plan.num_parts,
+            batches=len(schedule),
+        ) as stream_sp:
+            if self.prefetch == 0 or len(schedule) <= 1:
+                # synchronous fallback (also the degenerate 0/1-batch case)
+                for shape, indices in schedule:
+                    batch = self._pack_timed(plan, indices, features, shape)
+                    self._launch(batch, out)
+            else:
+                q: queue.Queue = queue.Queue(maxsize=self.prefetch)
+                stop = threading.Event()  # consumer died: unblock producer
+                # pack spans from the prefetch thread parent under this
+                # run's stream span, not under whatever that thread did last
+                stream_id = stream_sp.span_id
 
-            def _put(item) -> bool:
-                while not stop.is_set():
-                    try:
-                        q.put(item, timeout=0.1)
-                        return True
-                    except queue.Full:
-                        continue
-                return False
+                def _put(item) -> bool:
+                    while not stop.is_set():
+                        try:
+                            q.put(item, timeout=0.1)
+                            return True
+                        except queue.Full:
+                            continue
+                    return False
 
-            def _producer():
+                def _producer():
+                    with tracer.adopt(stream_id):
+                        try:
+                            for shape, indices in schedule:
+                                if not _put(
+                                    self._pack_timed(plan, indices, features, shape)
+                                ):
+                                    return
+                            _put(_SENTINEL)
+                        except BaseException as e:  # noqa: BLE001 — forwarded to consumer
+                            _put(e)
+
+                th = threading.Thread(
+                    target=_producer, name="exec-prefetch", daemon=True
+                )
+                th.start()
                 try:
-                    for shape, indices in schedule:
-                        if not _put(self._pack_timed(plan, indices, features, shape)):
-                            return
-                    _put(_SENTINEL)
-                except BaseException as e:  # noqa: BLE001 — forwarded to consumer
-                    _put(e)
-
-            th = threading.Thread(
-                target=_producer, name="exec-prefetch", daemon=True
-            )
-            th.start()
-            try:
-                while True:
-                    self.stats.max_queue_depth = max(
-                        self.stats.max_queue_depth, q.qsize()
-                    )
-                    got = q.get()
-                    if got is _SENTINEL:
-                        break
-                    if isinstance(got, BaseException):
-                        raise got
-                    self._launch(got, out)
-            finally:
-                # a launch failure leaves the producer blocked mid-put;
-                # the stop flag makes its bounded put give up promptly
-                # instead of stalling join for its full timeout
-                stop.set()
-                th.join(timeout=60.0)
+                    while True:
+                        depth = q.qsize()
+                        self.stats.max_queue_depth = max(
+                            self.stats.max_queue_depth, depth
+                        )
+                        REGISTRY.gauge("exec.queue_depth").set(depth)
+                        got = q.get()
+                        if got is _SENTINEL:
+                            break
+                        if isinstance(got, BaseException):
+                            raise got
+                        self._launch(got, out)
+                finally:
+                    # a launch failure leaves the producer blocked mid-put;
+                    # the stop flag makes its bounded put give up promptly
+                    # instead of stalling join for its full timeout
+                    stop.set()
+                    th.join(timeout=60.0)
 
         self.stats.runs += 1
         # delta, not the runner's cumulative count: a runner shared with
         # the service scheduler also compiles for regular bucketed items,
         # and those must not be attributed to this stream
-        self.stats.compiles += self.runner.compile_count - compiles_before
-        self.stats.wall_s += time.perf_counter() - t_wall
+        run_compiles = self.runner.compile_count - compiles_before
+        self.stats.compiles += run_compiles
+        wall = time.perf_counter() - t_wall
+        self.stats.wall_s += wall
+        REGISTRY.counter("exec.runs").inc()
+        REGISTRY.counter("exec.compiles").inc(run_compiles)
+        REGISTRY.histogram("exec.wall_s").observe(wall)
         return out
 
     def run_subgraphs(
@@ -238,19 +258,28 @@ class StreamingExecutor:
 
     def _pack_timed(self, plan, indices, features, shape) -> PackedBatch:
         t0 = time.perf_counter()
-        batch = pack_partitions(plan, indices, features, shape, self.capacity)
-        self.stats.pack_s += time.perf_counter() - t0
+        with span("exec.pack", parts=len(indices)) as sp:
+            batch = pack_partitions(plan, indices, features, shape, self.capacity)
+            sp.set(bytes=batch.nbytes)
+        dt = time.perf_counter() - t0
+        self.stats.pack_s += dt
         self.stats.bytes_h2d += batch.nbytes
+        REGISTRY.counter("exec.bytes_h2d").inc(batch.nbytes)
+        REGISTRY.histogram("exec.pack_s").observe(dt)
         return batch
 
     def _launch(self, batch: PackedBatch, out: np.ndarray) -> None:
         t0 = time.perf_counter()
-        pred = self.runner(batch.arrays)
-        self.stats.device_s += time.perf_counter() - t0
+        with span("exec.launch", parts=len(batch.items)):
+            pred = self.runner(batch.arrays)
+        dt = time.perf_counter() - t0
+        self.stats.device_s += dt
         self.stats.launches += 1
         self.stats.batches += 1
         self.stats.partitions += len(batch.items)
         self.stats.core_rows += scatter_core_predictions(out, batch, pred)
+        REGISTRY.counter("exec.launches").inc()
+        REGISTRY.histogram("exec.device_s").observe(dt)
 
 
 #: small identity-keyed executor reuse pool: a fresh executor per call

@@ -36,6 +36,7 @@ from typing import Union
 import numpy as np
 
 from repro.core import aig as A
+from repro.obs import REGISTRY, span
 
 __all__ = ["dump", "dumps", "load", "loads", "structural_hash", "AigerError"]
 
@@ -201,6 +202,15 @@ def _parse_trailer(f: io.BytesIO) -> dict[str, str]:
 
 def loads(data: bytes, *, name: str = "aiger") -> A.AIG:
     """Parse AIGER bytes (either format) into an :class:`AIG`."""
+    with span("io.aiger.loads", bytes=len(data)) as sp:
+        aig = _loads(data, name=name)
+        sp.set(nodes=aig.num_nodes)
+    REGISTRY.counter("io.aiger.parses").inc()
+    REGISTRY.counter("io.aiger.bytes").inc(len(data))
+    return aig
+
+
+def _loads(data: bytes, *, name: str) -> A.AIG:
     f = io.BytesIO(data)
     header = _read_line(f).split()
     if len(header) < 6 or header[0] not in (b"aig", b"aag"):

@@ -82,14 +82,24 @@ SUBLANE = 8            # f32 sublane quantum
 #                        time from static shapes/dtypes.
 # ---------------------------------------------------------------------------
 
-PROBE = {
-    "edge_stream_gathers": 0,
-    "kernel_walks": 0,
-    "pallas_calls": 0,
-    "weight_gathers": 0,
-    "output_scatters": 0,
-    "stream_bytes": 0,
-}
+# Since the repro.obs spine landed, PROBE is a dict-shaped *view* over
+# the process-wide metrics registry (counters ``kernels.spmm.<key>``):
+# the historic ``PROBE["k"] += 1`` / ``dict(PROBE)`` idiom keeps working
+# while every increment is visible to Session.report() and benchmarks.
+from repro.obs.metrics import REGISTRY, CounterGroup
+
+PROBE = CounterGroup(
+    REGISTRY,
+    "kernels.spmm",
+    (
+        "edge_stream_gathers",
+        "kernel_walks",
+        "pallas_calls",
+        "weight_gathers",
+        "output_scatters",
+        "stream_bytes",
+    ),
+)
 
 
 def reset_probe() -> None:

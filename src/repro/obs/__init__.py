@@ -1,0 +1,52 @@
+"""repro.obs — unified tracing + metrics spine.
+
+Public surface:
+
+  * tracing: :class:`Tracer`, :func:`span`, :func:`current_tracer`,
+    :data:`NULL_TRACER`, :class:`TraceHandle`, plus the Chrome-trace
+    round-trip helpers :func:`spans_from_chrome` / :func:`span_coverage`;
+  * metrics: :class:`MetricsRegistry`, the process-wide :data:`REGISTRY`,
+    :class:`CounterGroup` (the ``PROBE`` bridge), :func:`fold_into`;
+  * reporting: :class:`Report` (built by ``Session.report()``).
+"""
+from repro.obs.metrics import (
+    Counter,
+    CounterGroup,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    REGISTRY,
+    fold_into,
+)
+from repro.obs.report import Report
+from repro.obs.trace import (
+    NULL_TRACER,
+    NullTracer,
+    Span,
+    TraceHandle,
+    Tracer,
+    current_tracer,
+    span,
+    span_coverage,
+    spans_from_chrome,
+)
+
+__all__ = [
+    "Counter",
+    "CounterGroup",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "NullTracer",
+    "REGISTRY",
+    "Report",
+    "Span",
+    "TraceHandle",
+    "Tracer",
+    "current_tracer",
+    "fold_into",
+    "span",
+    "span_coverage",
+    "spans_from_chrome",
+]

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import gnn
 from repro.kernels import ops
+from repro.obs import REGISTRY, span
 from repro.service.bucketing import (
     BucketShape,
     WorkItem,
@@ -77,6 +78,7 @@ class BucketRunner:
         def _fwd(params, x, edge_src, edge_dst, edge_inv, edge_slot, num_nodes, agg):
             # Executes at trace time only: one increment per compilation.
             self.compile_count += 1
+            REGISTRY.counter("service.runner_compiles").inc()
             if agg is None and self._backend == "onehot":
                 # same pair the pipeline path uses (closures over tracers)
                 agg = ops.make_agg_pair(edge_src, edge_dst, num_nodes, "onehot")
@@ -232,21 +234,24 @@ class ShapeBucketScheduler:
         """
         by_bucket: dict[BucketShape, list[WorkItem]] = defaultdict(list)
         out: dict[tuple[int, int], np.ndarray] = {}
-        for it in items:
-            shape = self.bucket_of(it)
-            if self._oversized(shape):
-                out[(it.req_id, it.part_index)] = self._stream_item(it)
-                self._items_run += 1
-            else:
-                by_bucket[shape].append(it)
-        for shape, group in by_bucket.items():
-            self._buckets_seen.add(shape)
-            for i in range(0, len(group), self.capacity):
-                chunk = group[i : i + self.capacity]
-                pred = self.runner(pack_batch(chunk, shape, self.capacity))
-                for it, p in zip(chunk, unpack_predictions(pred, chunk, shape)):
-                    out[(it.req_id, it.part_index)] = p
-                self._items_run += len(chunk)
+        with span("scheduler.run_items", items=len(items)):
+            for it in items:
+                shape = self.bucket_of(it)
+                if self._oversized(shape):
+                    out[(it.req_id, it.part_index)] = self._stream_item(it)
+                    self._items_run += 1
+                else:
+                    by_bucket[shape].append(it)
+            for shape, group in by_bucket.items():
+                self._buckets_seen.add(shape)
+                for i in range(0, len(group), self.capacity):
+                    chunk = group[i : i + self.capacity]
+                    with span("scheduler.batch", bucket=str(shape), n=len(chunk)):
+                        pred = self.runner(pack_batch(chunk, shape, self.capacity))
+                    for it, p in zip(chunk, unpack_predictions(pred, chunk, shape)):
+                        out[(it.req_id, it.part_index)] = p
+                    self._items_run += len(chunk)
+            REGISTRY.counter("scheduler.items_run").inc(len(items))
         return out
 
     def stats(self) -> SchedulerStats:

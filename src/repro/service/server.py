@@ -46,6 +46,7 @@ from repro.core import gnn
 from repro.core import pipeline as P
 from repro.core.verify import VerifyResult
 from repro.io import aiger
+from repro.obs import MetricsRegistry, span
 from repro.service.bucketing import items_from_prepared
 from repro.service.cache import ResultCache
 from repro.service.scheduler import ShapeBucketScheduler
@@ -127,7 +128,8 @@ class VerificationService:
     """
 
     def __init__(self, params, config: Optional[ServiceConfig] = None,
-                 _warn: bool = True, **overrides):
+                 _warn: bool = True, metrics: Optional[MetricsRegistry] = None,
+                 **overrides):
         if _warn:
             import warnings
 
@@ -142,6 +144,9 @@ class VerificationService:
         elif overrides:
             config = dataclasses.replace(config, **overrides)
         self.config = config
+        # per-engine registry (a Session passes its own, so two live
+        # sessions never read each other's service numbers)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.cache = ResultCache(config.cache_capacity)
         self.scheduler = ShapeBucketScheduler(
             params,
@@ -200,6 +205,7 @@ class VerificationService:
                 t_submit=time.perf_counter(),
             )
             self._requests[rid] = req
+        self.metrics.counter("service.admitted").inc()
         self._pool.submit(self._prepare_one, req)
         return rid
 
@@ -262,6 +268,9 @@ class VerificationService:
             "streamed_items": s.streamed_items,
             # process-wide structural plan cache (groot* backends)
             "plan_cache": PLAN_CACHE.snapshot(),
+            # this engine's obs registry: admit counts, queue depth/wait,
+            # per-stage latency histograms
+            "obs": self.metrics.snapshot(prefix="service."),
         }
 
     # -- workers -------------------------------------------------------------
@@ -305,11 +314,12 @@ class VerificationService:
             )
             key = None
             if design is None or isinstance(design, A.AIG):
-                h = (
-                    aiger.structural_hash(design)
-                    if design is not None
-                    else f"gen:{req.dataset}:{req.bits}:{req.seed}"
-                )
+                with span("service.hash"):
+                    h = (
+                        aiger.structural_hash(design)
+                        if design is not None
+                        else f"gen:{req.dataset}:{req.bits}:{req.seed}"
+                    )
                 # every request field that can change the outcome must be in
                 # the key: seed steers the partitioner, signed the spec check
                 key = ResultCache.key(
@@ -320,6 +330,7 @@ class VerificationService:
                 hit = self.cache.get(key)
                 if hit is not None:
                     assert isinstance(hit, ServiceResult)
+                    self.metrics.counter("service.cache_hits").inc()
                     self._finish(
                         req,
                         dataclasses.replace(
@@ -333,10 +344,15 @@ class VerificationService:
                         ),
                     )
                     return
-            prep = P.prepare(cfg, design)
-            items = items_from_prepared(req.req_id, prep)
+            with span("service.prepare", req_id=req.req_id):
+                prep = P.prepare(cfg, design)
+                items = items_from_prepared(req.req_id, prep)
             t_prep = time.perf_counter() - t0
-            self._device_q.put((req, key, prep, items, t_prep))
+            self.metrics.histogram("service.prepare_s").observe(t_prep)
+            self._device_q.put(
+                (req, key, prep, items, t_prep, time.perf_counter())
+            )
+            self.metrics.gauge("service.queue_depth").set(self._device_q.qsize())
         except Exception as e:  # noqa: BLE001 — request-scoped failure
             self._fail(req, e)
 
@@ -356,14 +372,22 @@ class VerificationService:
                     break
             try:
                 t0 = time.perf_counter()
-                all_items = [it for (_, _, _, items, _) in batch for it in items]
+                for entry_ in batch:
+                    self.metrics.histogram("service.queue_wait_s").observe(
+                        t0 - entry_[5]
+                    )
+                self.metrics.gauge("service.queue_depth").set(
+                    self._device_q.qsize()
+                )
+                all_items = [it for (_, _, _, items, _, _) in batch for it in items]
                 preds = self.scheduler.run_items(all_items)
                 t_inf = time.perf_counter() - t0
+                self.metrics.histogram("service.infer_s").observe(t_inf)
             except Exception as e:  # noqa: BLE001
                 for req, *_ in batch:
                     self._fail(req, e)
                 continue
-            for req, key, prep, items, t_prep in batch:
+            for req, key, prep, items, t_prep, _t_enq in batch:
                 out = np.zeros(prep.num_nodes, dtype=np.int32)
                 for it in items:
                     p = preds[(req.req_id, it.part_index)]
@@ -381,6 +405,7 @@ class VerificationService:
             if req.verify:
                 verdict = P.verify_prepared(prep, pred, signed=req.signed)
             timings["verify"] = time.perf_counter() - t0
+            self.metrics.histogram("service.verify_s").observe(timings["verify"])
             timings["total"] = time.perf_counter() - req.t_submit
             result = ServiceResult(
                 req_id=req.req_id,

@@ -1,0 +1,305 @@
+"""`repro.obs`: the tracing + metrics spine.
+
+Fast lane: span nesting/parenting, the disabled no-op path, Chrome
+export round-trip, cross-thread adoption (both synthetic and through the
+real exec prefetch thread), metrics registry semantics, the PROBE
+bridge, and counter isolation between two live sessions.  Slow lane:
+the csa-64 acceptance criterion — one traced verify per route (full /
+partitioned-loop / streamed) whose trace passes the CI gate (required
+children + >=95% coverage) and whose report carries non-zero plan-cache,
+compile, and byte counters.
+"""
+from __future__ import annotations
+
+import json
+import threading
+
+import jax
+import pytest
+
+from repro.api import Session, SessionConfig
+from repro.core import gnn
+from repro.obs import (
+    REGISTRY,
+    CounterGroup,
+    MetricsRegistry,
+    NULL_TRACER,
+    Tracer,
+    current_tracer,
+    fold_into,
+    span,
+    span_coverage,
+    spans_from_chrome,
+)
+from repro.obs.check import check_trace
+
+
+@pytest.fixture(scope="module")
+def rand_params():
+    return gnn.init_params(gnn.GNNConfig(), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Tracer: nesting, disabled path, export round-trip
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_records_parent_ids():
+    tr = Tracer()
+    with tr.activate():
+        with span("outer") as outer:
+            with span("inner_a") as a:
+                pass
+            with span("inner_b", k=3) as b:
+                b.set(extra="late")
+    spans = {s.name: s for s in tr.spans()}
+    assert spans["outer"].parent_id is None
+    assert spans["inner_a"].parent_id == outer.span_id
+    assert spans["inner_b"].parent_id == outer.span_id
+    assert spans["inner_b"].attrs == {"k": 3, "extra": "late"}
+    # children recorded before the parent closes, all well-formed
+    for s in spans.values():
+        assert s.t1 >= s.t0
+
+
+def test_disabled_path_is_the_shared_noop():
+    # no tracer active: module-level span() must not record anywhere
+    assert current_tracer() is NULL_TRACER
+    ctx = span("anything", k=1)
+    with ctx as s:
+        assert s.span_id is None
+        s.set(ignored=True)  # no-op, no error
+    # the no-op context is one shared singleton — zero allocation per span
+    assert span("other") is ctx
+    assert NULL_TRACER.adopt(42) is NULL_TRACER.activate() is ctx
+
+
+def test_activate_restores_previous_tracer():
+    t1, t2 = Tracer(), Tracer()
+    with t1.activate():
+        with t2.activate():
+            with span("inner"):
+                pass
+        with span("outer"):
+            pass
+    assert current_tracer() is NULL_TRACER
+    assert [s.name for s in t1.spans()] == ["outer"]
+    assert [s.name for s in t2.spans()] == ["inner"]
+
+
+def test_chrome_export_round_trip(tmp_path):
+    tr = Tracer()
+    with tr.activate():
+        with span("root", design="csa-8"):
+            with span("child"):
+                pass
+    path = tmp_path / "trace.json"
+    tr.save(path)
+    data = json.loads(path.read_text())
+    # metadata event names the thread; X events carry the spans
+    assert any(ev["ph"] == "M" for ev in data["traceEvents"])
+    back = spans_from_chrome(data)
+    orig = tr.spans()
+    assert {s["name"] for s in back} == {s.name for s in orig}
+    by_name = {s["name"]: s for s in back}
+    root, child = by_name["root"], by_name["child"]
+    assert child["parent_id"] == root["span_id"]
+    assert root["attrs"]["design"] == "csa-8"
+    # timestamps survive the µs round-trip to within a microsecond
+    o = {s.name: s for s in orig}
+    for name, s in by_name.items():
+        assert abs((s["t1"] - s["t0"]) - o[name].duration) < 2e-6
+    # coverage computes identically on dicts and Span objects
+    assert span_coverage(back, root["span_id"]) == pytest.approx(
+        span_coverage(orig, o["root"].span_id), abs=1e-6
+    )
+
+
+def test_cross_thread_adoption_parents_under_owner_span():
+    tr = Tracer()
+    with tr.activate():
+        with span("owner") as owner:
+            parent = tr.current_id()
+
+            def worker():
+                with tr.adopt(parent):
+                    with span("worker_span"):
+                        pass
+
+            t = threading.Thread(target=worker, name="obs-worker")
+            t.start()
+            t.join()
+    spans = {s.name: s for s in tr.spans()}
+    w = spans["worker_span"]
+    assert w.parent_id == owner.span_id
+    assert w.thread == "obs-worker"
+    assert w.tid != spans["owner"].tid
+
+
+# ---------------------------------------------------------------------------
+# Metrics: registry semantics, the PROBE bridge, fold_into
+# ---------------------------------------------------------------------------
+
+def test_registry_instruments_and_delta():
+    reg = MetricsRegistry()
+    reg.counter("a.hits").inc()
+    reg.counter("a.hits").inc(2)
+    assert reg.counter("a.hits") is reg.counter("a.hits")
+    before = reg.snapshot()
+    reg.counter("a.hits").inc(5)
+    reg.counter("b.new").inc()
+    assert reg.delta(before) == {"a.hits": 5, "b.new": 1}
+    assert reg.delta(before, prefix="a.") == {"a.hits": 5}
+
+    g = reg.gauge("q.depth")
+    g.set(3)
+    g.set(1)
+    assert (g.value, g.max) == (1, 3)
+
+    h = reg.histogram("lat_s")
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 3
+    assert s["sum"] == pytest.approx(0.6)
+    assert s["min"] == pytest.approx(0.1)
+    assert s["p50"] == pytest.approx(0.2)
+
+
+def test_counter_group_is_the_probe_bridge():
+    reg = MetricsRegistry()
+    probe = CounterGroup(reg, "k.spmm", ("walks", "bytes"))
+    probe["walks"] += 1
+    probe["walks"] += 1
+    probe["bytes"] += 128
+    assert dict(probe) == {"walks": 2, "bytes": 128}
+    assert reg.counters("k.spmm.") == {"k.spmm.walks": 2, "k.spmm.bytes": 128}
+    for k in probe:          # reset_probe's historic idiom
+        probe[k] = 0
+    assert reg.counters("k.spmm.") == {"k.spmm.walks": 0, "k.spmm.bytes": 0}
+
+
+def test_kernel_probe_feeds_global_registry():
+    from repro.kernels import groot_spmm
+
+    groot_spmm.reset_probe()
+    before = REGISTRY.counters("kernels.spmm.")
+    groot_spmm.PROBE["kernel_walks"] += 1
+    after = REGISTRY.counters("kernels.spmm.")
+    assert after["kernels.spmm.kernel_walks"] == \
+        before["kernels.spmm.kernel_walks"] + 1
+    assert groot_spmm.probe_snapshot()["kernel_walks"] == 1
+
+
+def test_fold_into_routes_ints_and_timings():
+    reg = MetricsRegistry()
+    fold_into(reg, "exec", {"launches": 3, "wall_s": 0.5, "mode": "streamed",
+                            "ok": True})
+    assert reg.counters() == {"exec.launches": 3}
+    assert reg.histogram("exec.wall_s").summary()["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Sessions: prefetch-thread parenting, isolation, cached-root tagging
+# ---------------------------------------------------------------------------
+
+def test_streamed_verify_parents_pack_spans_across_prefetch_thread(rand_params):
+    sess = Session(rand_params, SessionConfig(num_partitions=4, trace=True))
+    r = sess.verify(dataset="csa", bits=16, verify=False, use_cache=False)
+    assert r.routing.mode == "streamed"
+    spans = r.trace.spans()
+    stream = [s for s in spans if s.name == "exec.stream"]
+    packs = [s for s in spans if s.name == "exec.pack"]
+    assert len(stream) == 1 and packs
+    for p in packs:
+        assert p.parent_id == stream[0].span_id
+        assert p.tid != stream[0].tid          # recorded on the prefetch thread
+        assert p.thread == "exec-prefetch"
+    assert r.trace.coverage() >= 0.95
+
+
+def test_session_counter_isolation(rand_params):
+    s1 = Session(rand_params, SessionConfig(trace=False))
+    s2 = Session(rand_params,
+                 SessionConfig(num_partitions=2, streaming=False))
+    s1.verify(dataset="csa", bits=8, verify=False, use_cache=False)
+    c1 = s1.report().session["counters"]
+    c2 = s2.report().session["counters"]
+    assert c1["session.verifies"] == 1
+    assert c1["session.route.full"] == 1
+    assert c2 == {}                            # s2 never ran: sees nothing
+    s2.verify(dataset="csa", bits=8, verify=False, use_cache=False)
+    c1b = s1.report().session["counters"]
+    c2b = s2.report().session["counters"]
+    assert c1b == c1                           # s2's run invisible to s1
+    assert c2b["session.route.partitioned"] == 1
+
+
+def test_cache_hit_root_is_tagged_and_gate_exempt(rand_params):
+    sess = Session(rand_params, SessionConfig(trace=True))
+    sess.verify(dataset="csa", bits=8, verify=False)
+    r2 = sess.verify(dataset="csa", bits=8, verify=False)
+    assert r2.cached
+    data = sess.obs.tracer.to_chrome()
+    roots = [s for s in spans_from_chrome(data)
+             if s["name"] == "session.verify"]
+    assert len(roots) == 2
+    assert [bool(r["attrs"].get("cached")) for r in sorted(
+        roots, key=lambda s: s["t0"])] == [False, True]
+    # the gate validates the full root and skips the cached one
+    assert check_trace(data, ["parse", "plan", "execute", "verdict"],
+                       0.95) == []
+
+
+def test_trace_disabled_produces_no_handle_and_no_spans(rand_params):
+    sess = Session(rand_params, SessionConfig(trace=False))
+    r = sess.verify(dataset="csa", bits=8, verify=False, use_cache=False)
+    assert r.trace is None
+    assert sess.obs.tracer is None
+    assert sess.report().spans is None
+    with pytest.raises(RuntimeError):
+        sess.save_trace("/tmp/never-written.json")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance (slow): csa-64 traced once per route — gate + report counters
+# ---------------------------------------------------------------------------
+
+#: per-route (config overrides, expected mode, compile counter, byte counter)
+ROUTES = [
+    ({"num_partitions": 1}, "full",
+     "gnn.forward_traces", "gnn.bytes_staged"),
+    ({"num_partitions": 4, "streaming": False}, "partitioned",
+     "gnn.forward_traces", "gnn.bytes_staged"),
+    ({"num_partitions": 4, "streaming": True}, "streamed",
+     "exec.compiles", "exec.bytes_h2d"),
+]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("overrides,mode,compile_ctr,bytes_ctr", ROUTES,
+                         ids=[m for _, m, _, _ in ROUTES])
+def test_csa64_traced_verify_acceptance(rand_params, tmp_path, overrides,
+                                        mode, compile_ctr, bytes_ctr):
+    sess = Session(rand_params,
+                   SessionConfig(backend="groot", trace=True, **overrides))
+    r = sess.verify(dataset="csa", bits=64, verify=False, use_cache=False)
+    assert r.routing.mode == mode
+
+    # trace: write/reload the Chrome JSON and run the exact CI gate
+    path = tmp_path / f"csa64_{mode}.json"
+    r.trace.save(path)
+    data = json.loads(path.read_text())
+    assert check_trace(data, ["parse", "plan", "execute", "verdict"],
+                       0.95) == []
+    assert r.trace.coverage() >= 0.95
+
+    # report: non-zero plan-cache, compile, and byte counters for the route
+    rep = sess.report()
+    pc = rep.plan_cache
+    assert pc["builds"] + pc["hits"] > 0
+    assert rep.process.get(compile_ctr, 0) > 0
+    assert rep.process.get(bytes_ctr, 0) > 0
+    assert rep.session["counters"][f"session.route.{mode}"] == 1
+    d = rep.to_dict()
+    json.dumps(d)                              # report is json-serialisable
+    assert d["session"]["counters"]["session.verifies"] == 1
