@@ -103,8 +103,11 @@ def main(argv=None):
                 "report": {
                     "stages": tracer.summary(),
                     "counters": REGISTRY.delta(reg0),
+                    # null, not 0.0, when the suite never touched the plan
+                    # cache — "0% hit rate" and "idle cache" are different
+                    # dashboard facts
                     "plan_cache_hit_rate": (
-                        (pc1.hits - pc0.hits) / lookups if lookups else 0.0
+                        (pc1.hits - pc0.hits) / lookups if lookups else None
                     ),
                 },
                 "tables": common.drain_tables(),

@@ -80,6 +80,17 @@ class SessionConfig:
     cache_capacity: int = 1024
     max_batch_requests: int = 16
     max_done_retained: int = 4096
+    #: compile-ahead warmup: pre-compile the (n_pad, e_pad) bucket grid at
+    #: engine construction so no submit() pays a cold jit.  warmup_shapes
+    #: pins the grid; None derives a diagonal one from the bucket bounds.
+    warmup: bool = False
+    warmup_shapes: Optional[tuple] = None
+    #: in-flight coalescing: concurrent same-key submissions share one
+    #: execution (followers finish from the leader's result, cached=True)
+    coalesce: bool = True
+    #: per-tenant admission cap — submit(tenant=...) raises AdmissionError
+    #: past this many unfinished requests (None = unlimited)
+    max_inflight_per_tenant: Optional[int] = None
 
     # -- observability (repro.obs) ------------------------------------------
     #: record a span tracer around every ``verify()`` (Chrome-trace
@@ -154,6 +165,10 @@ class SessionConfig:
             max_batch_requests=self.max_batch_requests,
             max_done_retained=self.max_done_retained,
             stream_dtype=self.stream_dtype,
+            warmup=self.warmup,
+            warmup_shapes=self.warmup_shapes,
+            coalesce=self.coalesce,
+            max_inflight_per_tenant=self.max_inflight_per_tenant,
         )
 
     @classmethod

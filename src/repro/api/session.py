@@ -491,10 +491,17 @@ class Session:
 
     def submit(self, design=None, *, dataset: Optional[str] = None,
                bits: Optional[int] = None, seed: Optional[int] = None,
-               verify: bool = True, signed: Optional[bool] = None) -> int:
-        """Async verification through the batched service engine (shape
-        buckets, packed launches, overlap of prepare/device/verify across
-        requests); returns a ticket for :meth:`poll` / :meth:`result`.
+               verify: bool = True, signed: Optional[bool] = None,
+               priority: int = 1, tenant: Optional[str] = None) -> int:
+        """Async verification through the batched service engine
+        (continuous batching into shape-bucketed packs, compile-ahead
+        warmup, overlap of prepare/device/verify across requests); returns
+        a ticket for :meth:`poll` / :meth:`result`.
+
+        ``priority`` orders the device pool (lower = sooner; 0 is the
+        express lane).  ``tenant`` attributes the request for per-tenant
+        admission caps (``max_inflight_per_tenant``) — a tenant at its cap
+        gets :class:`repro.service.AdmissionError` here.
 
         AIGER bytes/paths are handed to the engine unparsed: parsing runs
         on the prepare pool, so a malformed file yields a per-ticket
@@ -512,7 +519,19 @@ class Session:
             seed=self.config.seed if seed is None else seed,
             verify=verify,
             signed=signed,
+            priority=priority,
+            tenant=tenant,
         )
+
+    def warm(self, shapes: Optional[tuple] = None) -> int:
+        """Force-construct the service engine and pre-compile its bucket
+        grid now, instead of on first :meth:`submit`.  Returns the number
+        of jit traces warmup triggered (0 if the engine already warmed at
+        construction via ``SessionConfig(warmup=True)``)."""
+        engine = self._service_engine()
+        if engine.scheduler.runner.warmed:
+            return 0
+        return engine.warm(shapes)
 
     def poll(self, ticket: int):
         """Non-blocking: the ServiceResult if finished, else None."""
@@ -560,6 +579,9 @@ class Session:
                 "buckets": [(b.n_pad, b.e_pad) for b in s.buckets],
                 "items_run": s.items_run,
                 "streamed_items": s.streamed_items,
+                "cold_compiles": s.cold_compiles,
+                "warm_compiles": s.warm_compiles,
+                "warmup_s": s.warmup_s,
             }
         return Report(
             created=datetime.datetime.now(datetime.timezone.utc).isoformat(

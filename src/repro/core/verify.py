@@ -138,6 +138,30 @@ def simulation_check(aig: A.AIG, bits: int, signed: bool, n_vectors: int = 256, 
         pis[i] = (a >> i) & 1
         pis[bits + i] = (b >> i) & 1
     out = aig.simulate(pis)
+    if 2 * bits <= 64:
+        # products fit machine words: accumulate in uint64 (wrap-around
+        # multiply IS reduction mod 2^64, and mod 2^(2*bits) is a mask)
+        mask = np.uint64((1 << (2 * bits)) - 1) if 2 * bits < 64 \
+            else np.uint64(0xFFFFFFFFFFFFFFFF)
+        got = np.zeros(len(a), dtype=np.uint64)
+        for k in range(out.shape[0]):
+            got += out[k].astype(np.uint64) << np.uint64(k)
+        ua, ub = a.astype(np.uint64), b.astype(np.uint64)
+        if signed:
+            # two's complement: sign-extend to the 2*bits ring before the
+            # wrap-around multiply; the mask makes the rings agree
+            sign_a = (ua >> np.uint64(bits - 1)) & np.uint64(1)
+            sign_b = (ub >> np.uint64(bits - 1)) & np.uint64(1)
+            ext = np.uint64(1 << bits)          # bits <= 32 on this path
+            with np.errstate(over="ignore"):
+                ua = ua - ext * sign_a
+                ub = ub - ext * sign_b
+                want = (ua * ub) & mask
+        else:
+            with np.errstate(over="ignore"):
+                want = (ua * ub) & mask
+        return bool(np.all((got & mask) == want))
+    # wide multipliers: python bignums (dtype=object) keep exactness
     got = np.zeros(len(a), dtype=object)
     for k in range(out.shape[0]):
         got += out[k].astype(object) * (1 << k)

@@ -31,7 +31,7 @@ from __future__ import annotations
 import hashlib
 import heapq
 import io
-from typing import Union
+from typing import Optional, Union
 
 import numpy as np
 
@@ -198,6 +198,25 @@ def _parse_trailer(f: io.BytesIO) -> dict[str, str]:
         elif line.startswith("groot-labels "):
             meta["labels"] = line[len("groot-labels "):]
     return meta
+
+
+def peek_name(data: bytes) -> Optional[str]:
+    """Cheap name scan: the ``groot-name`` comment line, without parsing.
+
+    For attributing requests that failed before (or during) the full
+    parse — scans only the comment section after the ``c`` marker.
+    """
+    in_comments = False
+    for raw in data.split(b"\n"):
+        if not in_comments:
+            if raw == b"c":
+                in_comments = True
+            continue
+        if raw.startswith(b"groot-name "):
+            return raw[len(b"groot-name "):].decode(
+                "utf-8", errors="replace"
+            ).strip() or None
+    return None
 
 
 def loads(data: bytes, *, name: str = "aiger") -> A.AIG:

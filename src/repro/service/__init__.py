@@ -10,12 +10,17 @@
 """
 from repro.service.cache import CacheStats, ResultCache  # noqa: F401
 from repro.service.bucketing import BucketShape, WorkItem, pack_batch  # noqa: F401
-from repro.service.scheduler import BucketRunner, ShapeBucketScheduler  # noqa: F401
+from repro.service.scheduler import (  # noqa: F401
+    BucketRunner,
+    ShapeBucketScheduler,
+    SlotPool,
+)
 
-_SERVER_EXPORTS = ("ServiceConfig", "ServiceResult", "VerificationService")
+_SERVER_EXPORTS = ("AdmissionError", "ServiceConfig", "ServiceResult",
+                   "VerificationService")
 __all__ = [
     "CacheStats", "ResultCache", "BucketShape", "WorkItem", "pack_batch",
-    "BucketRunner", "ShapeBucketScheduler", *_SERVER_EXPORTS,
+    "BucketRunner", "ShapeBucketScheduler", "SlotPool", *_SERVER_EXPORTS,
 ]
 
 

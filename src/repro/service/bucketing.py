@@ -109,6 +109,26 @@ def items_from_prepared(req_id: int, prep: PreparedDesign) -> list[WorkItem]:
     ]
 
 
+def dummy_item(n_feat: int) -> WorkItem:
+    """Minimal valid work item (2 nodes, 1 edge) for compile-ahead warmup.
+
+    ``pack_batch`` pads it out to any target :class:`BucketShape`, so one
+    dummy per bucket is enough to trigger that bucket's jit trace without
+    synthesising a real design of the right size.
+    """
+    return WorkItem(
+        req_id=-1,
+        part_index=0,
+        feats=np.zeros((2, n_feat), dtype=np.float32),
+        edge_src=np.array([0], dtype=np.int32),
+        edge_dst=np.array([1], dtype=np.int32),
+        edge_inv=np.zeros(1, dtype=bool),
+        edge_slot=np.zeros(1, dtype=np.uint8),
+        num_core=2,
+        global_ids=np.arange(2, dtype=np.int64),
+    )
+
+
 def pack_batch(items: list[WorkItem], shape: BucketShape, capacity: int) -> dict:
     """Disjoint-union pack of <= ``capacity`` same-bucket items.
 

@@ -5,14 +5,21 @@ Python body of a jitted function executes once per *trace* — i.e. once
 per new (shape signature, static args) cache entry — so a plain counter
 incremented inside it is an exact compile-count probe.  That probe is
 what the acceptance criterion ("N same-family designs trigger <=
-num_buckets compilations") asserts against.
+num_buckets compilations") asserts against.  After :meth:`BucketRunner.
+mark_warm` (the service calls it once compile-ahead warmup finishes),
+every further trace also counts as a *cold* compile — the
+``service.cold_compiles`` counter a warmed service keeps at zero.
 
-:class:`ShapeBucketScheduler` groups work items by bucket, packs up to
-``capacity`` same-bucket items per device call, and reads back per-item
-real-node predictions.  Backends come in two classes:
+:class:`ShapeBucketScheduler` packs up to ``capacity`` same-bucket items
+per device call (:meth:`run_pack`) and reads back per-item real-node
+predictions; :class:`SlotPool` is the priority-ordered admission pool
+the continuous device loop feeds packs from.  Backends come in two
+classes:
 
   * **shape-stable** ("ref", "onehot"): one compiled executable per
-    bucket — the compile-count <= num_buckets guarantee holds;
+    bucket — the compile-count <= num_buckets guarantee holds, and
+    :meth:`ShapeBucketScheduler.warm` can pre-compile the whole bucket
+    grid so no user request ever pays a cold jit;
   * **structure-keyed** (the Pallas ``groot*`` backends): each packed
     batch's degree-bucketing plan is a jit constant, so the compile unit
     is the packed *structure*, not the padded shape.  The runner fetches
@@ -20,12 +27,16 @@ real-node predictions.  Backends come in two classes:
     structural plan cache — a recurring structure (regression farms
     resubmitting the same netlist) reuses the SAME pair object and
     therefore the same compiled executable with 0 new plan builds.
+    Warmup primes the pack path and bucket bookkeeping but cannot
+    pre-compile unseen structures.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
-from collections import defaultdict
+from collections import defaultdict, deque
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +44,11 @@ import numpy as np
 
 from repro.core import gnn
 from repro.kernels import ops
-from repro.obs import REGISTRY, span
+from repro.obs import REGISTRY, MetricsRegistry, span
 from repro.service.bucketing import (
     BucketShape,
     WorkItem,
+    dummy_item,
     pack_batch,
     unpack_predictions,
 )
@@ -49,7 +61,8 @@ class BucketRunner:
     """One jitted padded GNN forward; counts compiles and device calls."""
 
     def __init__(self, params, backend: str = "ref", *, max_structures: int = 64,
-                 stream_dtype: str | None = None):
+                 stream_dtype: str | None = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if backend not in SHAPE_STABLE_BACKENDS + STRUCTURE_KEYED_BACKENDS:
             raise ValueError(
                 f"service backend must be one of {SHAPE_STABLE_BACKENDS} "
@@ -61,8 +74,15 @@ class BucketRunner:
         # edge-stream dtype for the hoisted groot* forward (None/f32 =
         # bit-exact staging; "bfloat16" halves the staged stream bytes)
         self._stream_dtype = stream_dtype
+        # per-engine registry for cold-compile attribution (the service
+        # passes its own; standalone runners fall back to a private one)
+        self._metrics = metrics if metrics is not None else MetricsRegistry()
         self.compile_count = 0
         self.run_count = 0
+        #: set by ``mark_warm()`` once compile-ahead warmup is done; any
+        #: trace after that is a *cold* compile a user request paid for
+        self.warmed = False
+        self.cold_compile_count = 0
         # structure-keyed backends: jit retains one executable (+ its
         # embedded plan constants) per static AggPair for the function's
         # lifetime — without a bound, a stream of structurally distinct
@@ -79,6 +99,10 @@ class BucketRunner:
             # Executes at trace time only: one increment per compilation.
             self.compile_count += 1
             REGISTRY.counter("service.runner_compiles").inc()
+            if self.warmed:
+                self.cold_compile_count += 1
+                REGISTRY.counter("service.cold_compiles").inc()
+                self._metrics.counter("service.cold_compiles").inc()
             if agg is None and self._backend == "onehot":
                 # same pair the pipeline path uses (closures over tracers)
                 agg = ops.make_agg_pair(edge_src, edge_dst, num_nodes, "onehot")
@@ -89,6 +113,18 @@ class BucketRunner:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
         self._jit = jax.jit(_fwd, static_argnames=("num_nodes", "agg"))
+
+    @property
+    def in_features(self) -> int:
+        """Model input width — what warmup's dummy feature rows must be."""
+        try:
+            return int(self._params["layers"][0]["w_self"].shape[0])
+        except (KeyError, IndexError, TypeError):
+            return 4
+
+    def mark_warm(self) -> None:
+        """Compile-ahead warmup is done: traces from here on are cold."""
+        self.warmed = True
 
     def __call__(self, batch: dict) -> np.ndarray:
         with self._lock:  # one device stream; keeps the probe race-free
@@ -129,6 +165,61 @@ class SchedulerStats:
     buckets: list[BucketShape]
     items_run: int
     streamed_items: int = 0
+    cold_compiles: int = 0
+    warm_compiles: int = 0
+    warm_shapes: tuple = ()
+    warmup_s: float = 0.0
+
+
+class SlotPool:
+    """Priority-ordered pending work items, grouped by bucket shape.
+
+    The continuous device loop's admission structure: ``admit`` slots a
+    prepared item under its bucket; ``best_bucket`` names the bucket
+    whose head item is globally most urgent (lowest ``(priority, seq)``);
+    ``take`` pops up to one pack's worth of that bucket — so a request
+    arriving between two device calls joins the very next same-bucket
+    pack instead of waiting behind a whole drained wave.  Single-consumer
+    (the device thread); producers go through the device queue.
+    """
+
+    def __init__(self):
+        self._heaps: dict[BucketShape, list] = {}
+        self._size = 0
+
+    def __len__(self) -> int:
+        return self._size
+
+    def admit(self, shape: BucketShape, priority: int, seq: int, payload) -> None:
+        heapq.heappush(
+            self._heaps.setdefault(shape, []), (priority, seq, payload)
+        )
+        self._size += 1
+
+    def head_key(self, shape: BucketShape) -> tuple:
+        """The (priority, seq) of the most urgent item in ``shape``."""
+        return self._heaps[shape][0][:2]
+
+    def best_bucket(self) -> Optional[BucketShape]:
+        best, best_key = None, None
+        for shape, heap in self._heaps.items():
+            if not heap:
+                continue
+            key = heap[0][:2]
+            if best_key is None or key < best_key:
+                best, best_key = shape, key
+        return best
+
+    def take(self, shape: BucketShape, n: int) -> list:
+        """Pop up to ``n`` payloads of ``shape`` in (priority, seq) order."""
+        heap = self._heaps.get(shape, [])
+        out = []
+        while heap and len(out) < n:
+            out.append(heapq.heappop(heap))
+        if not heap:
+            self._heaps.pop(shape, None)
+        self._size -= len(out)
+        return out
 
 
 class ShapeBucketScheduler:
@@ -141,6 +232,10 @@ class ShapeBucketScheduler:
     buckets and stream through the SAME :class:`BucketRunner`, so the
     compile-count probe keeps covering them.
     """
+
+    #: bounded log of recent device packs — (bucket, [req ids], fill) —
+    #: what the continuous-batching tests assert admission order against
+    PACK_LOG_MAX = 256
 
     def __init__(
         self,
@@ -156,10 +251,13 @@ class ShapeBucketScheduler:
         stream_capacity: int = 2,
         stream_partitioner: str = "multilevel",
         stream_dtype: str | None = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         assert capacity >= 1
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.runner = BucketRunner(params, backend, max_structures=max_structures,
-                                   stream_dtype=stream_dtype)
+                                   stream_dtype=stream_dtype,
+                                   metrics=self.metrics)
         self.capacity = capacity
         self.min_nodes = min_nodes
         self.min_edges = min_edges
@@ -171,6 +269,10 @@ class ShapeBucketScheduler:
         self._buckets_seen: set[BucketShape] = set()
         self._items_run = 0
         self._streamed_items = 0
+        self._warm_compiles = 0
+        self._warm_shapes: tuple = ()
+        self._warmup_s = 0.0
+        self.pack_log: deque = deque(maxlen=self.PACK_LOG_MAX)
 
     def bucket_of(self, item: WorkItem) -> BucketShape:
         return item.bucket(min_nodes=self.min_nodes, min_edges=self.min_edges)
@@ -225,12 +327,35 @@ class ShapeBucketScheduler:
         self._buckets_seen.update(self._executor.buckets_seen)
         return pred[: item.num_nodes]
 
+    def run_pack(
+        self, chunk: list[WorkItem], shape: BucketShape
+    ) -> dict[tuple[int, int], np.ndarray]:
+        """One device call: pack <= ``capacity`` same-bucket items, run,
+        unpack.  The continuous device loop's unit of work — between two
+        ``run_pack`` calls the loop re-drains its queue, which is what
+        admits a newly-prepared request into the next open slot."""
+        assert 0 < len(chunk) <= self.capacity
+        self._buckets_seen.add(shape)
+        with span("scheduler.batch", bucket=str(shape), n=len(chunk)):
+            pred = self.runner(pack_batch(chunk, shape, self.capacity))
+        out = {}
+        for it, p in zip(chunk, unpack_predictions(pred, chunk, shape)):
+            out[(it.req_id, it.part_index)] = p
+        self._items_run += len(chunk)
+        fill = len(chunk) / self.capacity
+        self.pack_log.append((shape, [it.req_id for it in chunk], fill))
+        self.metrics.gauge("service.slot_occupancy").set(fill)
+        REGISTRY.counter("scheduler.items_run").inc(len(chunk))
+        return out
+
     def run_items(self, items: list[WorkItem]) -> dict[tuple[int, int], np.ndarray]:
         """Run a set of items; returns (req_id, part_index) -> real-node preds.
 
         Items of the same bucket are packed ``capacity`` at a time, so a
         burst of same-shaped requests shares device calls as well as
         compilations.  Oversized items stream through the executor.
+        (Synchronous convenience over :meth:`run_pack`; the service's
+        continuous loop feeds packs one at a time instead.)
         """
         by_bucket: dict[BucketShape, list[WorkItem]] = defaultdict(list)
         out: dict[tuple[int, int], np.ndarray] = {}
@@ -243,16 +368,53 @@ class ShapeBucketScheduler:
                 else:
                     by_bucket[shape].append(it)
             for shape, group in by_bucket.items():
-                self._buckets_seen.add(shape)
                 for i in range(0, len(group), self.capacity):
-                    chunk = group[i : i + self.capacity]
-                    with span("scheduler.batch", bucket=str(shape), n=len(chunk)):
-                        pred = self.runner(pack_batch(chunk, shape, self.capacity))
-                    for it, p in zip(chunk, unpack_predictions(pred, chunk, shape)):
-                        out[(it.req_id, it.part_index)] = p
-                    self._items_run += len(chunk)
-            REGISTRY.counter("scheduler.items_run").inc(len(items))
+                    out.update(self.run_pack(group[i : i + self.capacity], shape))
         return out
+
+    def run_one(self, item: WorkItem) -> dict[tuple[int, int], np.ndarray]:
+        """Run a single (possibly oversized) item — the streamed route's
+        entry for the continuous loop."""
+        shape = self.bucket_of(item)
+        if self._oversized(shape):
+            pred = self._stream_item(item)
+            self._items_run += 1
+            REGISTRY.counter("scheduler.items_run").inc()
+            return {(item.req_id, item.part_index): pred}
+        return self.run_pack([item], shape)
+
+    # -- compile-ahead warmup ------------------------------------------------
+
+    def warm(self, shapes, *, stream: bool = False) -> int:
+        """Pre-compile the bucket grid: one dummy pack per (shape,
+        slot-layout) so no user request pays a cold jit.  ``stream=True``
+        additionally compiles each shape at the streamed route's
+        ``stream_capacity`` slot layout (a different jit signature).
+        Returns the number of jit traces warmup triggered and marks the
+        runner warm — every later trace counts as a cold compile."""
+        import time
+
+        t0 = time.perf_counter()
+        before = self.runner.compile_count
+        f = self.runner.in_features
+        capacities = [self.capacity]
+        if stream and self.stream_capacity != self.capacity:
+            capacities.append(self.stream_capacity)
+        warmed = []
+        for n_pad, e_pad in shapes:
+            shape = BucketShape(int(n_pad), int(e_pad))
+            warmed.append((shape.n_pad, shape.e_pad))
+            it = dummy_item(f)
+            for cap in capacities:
+                self.runner(pack_batch([it], shape, cap))
+        self._warm_compiles += self.runner.compile_count - before
+        self._warm_shapes = tuple(sorted(set(self._warm_shapes) | set(warmed)))
+        self._warmup_s += time.perf_counter() - t0
+        self.runner.mark_warm()
+        self.metrics.counter("service.warmup_compiles").inc(
+            self.runner.compile_count - before
+        )
+        return self.runner.compile_count - before
 
     def stats(self) -> SchedulerStats:
         return SchedulerStats(
@@ -261,4 +423,8 @@ class ShapeBucketScheduler:
             buckets=sorted(self._buckets_seen, key=lambda b: (b.n_pad, b.e_pad)),
             items_run=self._items_run,
             streamed_items=self._streamed_items,
+            cold_compiles=self.runner.cold_compile_count,
+            warm_compiles=self._warm_compiles,
+            warm_shapes=self._warm_shapes,
+            warmup_s=self._warmup_s,
         )

@@ -1,6 +1,6 @@
 """`VerificationService`: submit/poll API + CLI entry point.
 
-    svc = VerificationService(params, num_partitions=4)
+    svc = VerificationService(params, num_partitions=4, warmup=True)
     ticket = svc.submit_aiger("design.aig")        # or submit_design(...)
     result = svc.result(ticket)                    # blocking; poll() doesn't
 
@@ -10,11 +10,31 @@ server:
   * a *prepare pool* (threads) runs the host-side work per request —
     AIGER parsing, structural hashing + cache lookup, feature
     extraction, partitioning, boundary re-growth;
-  * a single *device worker* drains prepared requests, batches their
-    partitions through the :class:`ShapeBucketScheduler` (padded pow-2
-    buckets -> stable jit shapes), and hands finished predictions back;
+  * a single *device worker* runs a **continuous-batching** loop: every
+    prepared item is admitted into a priority-ordered
+    :class:`~repro.service.scheduler.SlotPool`, and between any two
+    device calls the loop re-drains its queue — so a request arriving
+    mid-flight joins the very next same-bucket pack (up to ``capacity``
+    slots per call) instead of waiting behind a drained wave;
   * verification (adder extraction + simulation cross-check) runs back
     on the pool, so the device never waits on host post-processing.
+
+Latency/robustness features layered on the loop:
+
+  * **compile-ahead warmup** (``warmup=True``): the configured
+    ``(n_pad, e_pad)`` bucket grid — and the streamed route's slot
+    layout when bucket ceilings are set — is jit-compiled at startup,
+    so no user request pays a cold compile.  The ``service.cold_compiles``
+    counter must read 0 afterwards; anything else is a regression.
+  * **priority lanes**: ``submit(priority=0)`` jumps a saturated queue —
+    the pool orders items by ``(priority, arrival)`` (lower = sooner).
+  * **per-tenant admission caps** (``max_inflight_per_tenant``): a
+    tenant at its in-flight limit gets :class:`AdmissionError` back at
+    ``submit()`` instead of head-of-line-blocking everyone else.
+  * **in-flight coalescing** (``coalesce=True``): concurrent submissions
+    with the same cache key share one execution — followers are finished
+    from the leader's result with ``cached=True``, which is what makes
+    revision-heavy (resubmit-the-same-netlist) traffic cheap.
 
 Cache hits skip partitioning, inference, and verification entirely.
 
@@ -32,6 +52,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import heapq
+import itertools
 import queue
 import threading
 import time
@@ -49,7 +71,11 @@ from repro.io import aiger
 from repro.obs import MetricsRegistry, span
 from repro.service.bucketing import items_from_prepared
 from repro.service.cache import ResultCache
-from repro.service.scheduler import ShapeBucketScheduler
+from repro.service.scheduler import ShapeBucketScheduler, SlotPool
+
+
+class AdmissionError(RuntimeError):
+    """Raised by ``submit()`` when a tenant is at its in-flight cap."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +104,17 @@ class ServiceConfig:
     # to the BucketRunner, and part of the result-cache key because it
     # changes numerics
     stream_dtype: Optional[str] = None
+    # compile-ahead warmup: pre-compile the bucket grid at construction so
+    # no user request pays a cold jit.  warmup_shapes pins the exact
+    # (n_pad, e_pad) grid; None derives one from min/max bucket bounds.
+    warmup: bool = False
+    warmup_shapes: Optional[tuple] = None
+    # in-flight coalescing: concurrent same-cache-key submissions share one
+    # execution (followers finish from the leader's result, cached=True)
+    coalesce: bool = True
+    # per-tenant admission cap: submit(tenant=...) raises AdmissionError
+    # once that tenant has this many unfinished requests (None = unlimited)
+    max_inflight_per_tenant: Optional[int] = None
 
     def cache_key_part(self) -> tuple:
         return (
@@ -112,8 +149,46 @@ class _Request:
     verify: bool
     signed: Optional[bool]
     t_submit: float
+    priority: int = 1                    # lower = sooner (0 = express lane)
+    tenant: Optional[str] = None
+    key: object = None                   # result-cache key, set during prepare
     event: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Optional[ServiceResult] = None
+
+
+@dataclasses.dataclass
+class _Prepared:
+    """One prepared request, queued for the device loop."""
+
+    req: _Request
+    key: object
+    prep: object                         # PreparedDesign
+    items: list
+    t_prep: float
+    t_enq: float
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """Device-loop state for a request whose items are in the pool."""
+
+    req: _Request
+    key: object
+    prep: object
+    remaining: int                       # items not yet run
+    out: np.ndarray                      # predictions scattered so far
+    t_prep: float
+    t_enq: float
+    t_infer: float = 0.0
+    failed: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One pool entry: a work item plus the request it belongs to."""
+
+    inflight: _Inflight
+    item: object                         # WorkItem
 
 
 class VerificationService:
@@ -159,6 +234,7 @@ class VerificationService:
             max_bucket_edges=config.max_bucket_edges,
             stream_capacity=config.stream_capacity,
             stream_dtype=config.stream_dtype,
+            metrics=self.metrics,
         )
         self._pool = ThreadPoolExecutor(
             max_workers=config.prepare_workers, thread_name_prefix="svc-prepare"
@@ -168,11 +244,57 @@ class VerificationService:
         self._done_order: deque[int] = deque()
         self._lock = threading.Lock()
         self._next_id = 0
+        self._seq = itertools.count()           # pool admission order
+        self._coalesce: dict = {}               # cache key -> follower reqs
+        self._tenant_inflight: dict[str, int] = {}
         self._stop = False
+        if config.warmup:
+            # synchronous, before the device thread exists: every bucket in
+            # the grid is compiled before the first submit() can race it
+            self.warm()
         self._device_thread = threading.Thread(
             target=self._device_loop, name="svc-device", daemon=True
         )
         self._device_thread.start()
+
+    # -- compile-ahead warmup ------------------------------------------------
+
+    def _default_warm_shapes(self) -> tuple:
+        """Diagonal bucket grid from the floor up to the ceilings.
+
+        Real AIGs land between ~1 and ~2 edges per node after padding, so
+        for each pow-2 node count we warm both the (n, n) and (n, 2n)
+        buckets (clamped to the configured edge bounds).
+        """
+        c = self.config
+        n_hi = c.max_bucket_nodes or c.min_nodes * 8
+        e_hi = c.max_bucket_edges or c.min_edges * 16
+        shapes: list[tuple[int, int]] = []
+        n = c.min_nodes
+        while n <= n_hi:
+            for e in (n, 2 * n):
+                e = min(max(e, c.min_edges), e_hi)
+                if (n, e) not in shapes:
+                    shapes.append((n, e))
+            n *= 2
+        return tuple(shapes)
+
+    def warm(self, shapes: Optional[tuple] = None) -> int:
+        """Pre-compile the bucket grid; returns the jit traces triggered.
+
+        Afterwards the runner counts every further trace as a *cold*
+        compile (``service.cold_compiles`` — a warmed service keeps it 0).
+        Only shape-stable backends can be fully pre-compiled; for the
+        structure-keyed ``groot*`` backends this primes the pack path but
+        unseen structures still trace on first sight.
+        """
+        shapes = shapes or self.config.warmup_shapes or self._default_warm_shapes()
+        stream = (
+            self.config.max_bucket_nodes is not None
+            or self.config.max_bucket_edges is not None
+        )
+        with span("service.warmup", shapes=len(shapes)):
+            return self.scheduler.warm(shapes, stream=stream)
 
     # -- submission API ------------------------------------------------------
 
@@ -186,11 +308,27 @@ class VerificationService:
         aiger_bytes: Optional[bytes] = None,
         verify: bool = True,
         signed: Optional[bool] = None,
+        priority: int = 1,
+        tenant: Optional[str] = None,
     ) -> int:
-        """Enqueue one verification request; returns a ticket id."""
+        """Enqueue one verification request; returns a ticket id.
+
+        ``priority`` orders the device pool (lower = sooner; 0 is the
+        express lane).  ``tenant`` attributes the request for admission
+        control: past ``max_inflight_per_tenant`` unfinished requests a
+        tenant gets :class:`AdmissionError` instead of queueing.
+        """
         if self._stop:
             raise RuntimeError("service is closed")
+        cap = self.config.max_inflight_per_tenant
         with self._lock:
+            if tenant is not None and cap is not None:
+                if self._tenant_inflight.get(tenant, 0) >= cap:
+                    self.metrics.counter("service.rejected").inc()
+                    raise AdmissionError(
+                        f"tenant {tenant!r} already has {cap} requests "
+                        f"in flight (max_inflight_per_tenant={cap})"
+                    )
             rid = self._next_id
             self._next_id += 1
             req = _Request(
@@ -203,11 +341,59 @@ class VerificationService:
                 verify=verify,
                 signed=signed,
                 t_submit=time.perf_counter(),
+                priority=priority,
+                tenant=tenant,
             )
             self._requests[rid] = req
+            if tenant is not None:
+                self._tenant_inflight[tenant] = (
+                    self._tenant_inflight.get(tenant, 0) + 1
+                )
         self.metrics.counter("service.admitted").inc()
-        self._pool.submit(self._prepare_one, req)
+        if not self._fast_admit(req):
+            self._pool.submit(self._prepare_one, req)
         return rid
+
+    def _gen_key(self, req: _Request):
+        """Cache key for a generated design — computable without parsing."""
+        return ResultCache.key(
+            f"gen:{req.dataset}:{req.bits}:{req.seed}",
+            self.config.cache_key_part() + (req.verify, req.signed, req.seed),
+        )
+
+    def _fast_admit(self, req: _Request) -> bool:
+        """Resolve a generated-design request at submit time when its key
+        alone decides it: a cache hit finishes immediately, a duplicate of
+        an in-flight key coalesces behind the leader — either way no pool
+        task is scheduled, so a burst of identical submissions costs one
+        execution plus ~nothing per follower.  Returns True when the
+        request needs no prepare."""
+        if req.design is not None or req.aiger_bytes is not None:
+            return False
+        key = self._gen_key(req)
+        hit = self.cache.get(key)
+        if hit is not None:
+            self.metrics.counter("service.cache_hits").inc()
+            self._finish(
+                req,
+                dataclasses.replace(
+                    hit,
+                    req_id=req.req_id,
+                    cached=True,
+                    timings={"total": time.perf_counter() - req.t_submit},
+                ),
+            )
+            return True
+        if self.config.coalesce:
+            with self._lock:
+                followers = self._coalesce.get(key)
+                if followers is not None:
+                    followers.append(req)
+                    self.metrics.counter("service.coalesced").inc()
+                    return True
+                self._coalesce[key] = []
+                req.key = key
+        return False
 
     def submit_design(self, dataset: str, bits: int, *, seed: int = 0,
                       verify: bool = True) -> int:
@@ -266,6 +452,13 @@ class VerificationService:
             "buckets": [(b.n_pad, b.e_pad) for b in s.buckets],
             "items_run": s.items_run,
             "streamed_items": s.streamed_items,
+            # compile-ahead warmup: grid size + cost, and the counter that
+            # must stay 0 afterwards (every post-warmup jit trace is a
+            # cold compile some user request paid for)
+            "cold_compiles": s.cold_compiles,
+            "warm_compiles": s.warm_compiles,
+            "warm_shapes": list(s.warm_shapes),
+            "warmup_s": s.warmup_s,
             # process-wide structural plan cache (groot* backends)
             "plan_cache": PLAN_CACHE.snapshot(),
             # this engine's obs registry: admit counts, queue depth/wait,
@@ -276,25 +469,56 @@ class VerificationService:
     # -- workers -------------------------------------------------------------
 
     def _finish(self, req: _Request, result: ServiceResult) -> None:
+        first = not req.event.is_set()
         req.result = result
         req.event.set()
         # bound the ticket table: a long-lived service must not retain one
         # _Request (+ result payload) per request forever.  Oldest finished
         # tickets stop being pollable past max_done_retained.
         with self._lock:
+            if first and req.tenant is not None:
+                n = self._tenant_inflight.get(req.tenant, 1) - 1
+                if n <= 0:
+                    self._tenant_inflight.pop(req.tenant, None)
+                else:
+                    self._tenant_inflight[req.tenant] = n
             self._done_order.append(req.req_id)
             while len(self._done_order) > self.config.max_done_retained:
                 self._requests.pop(self._done_order.popleft(), None)
 
+    @staticmethod
+    def _req_name(req: _Request) -> str:
+        """Best attributable name for a request, even when it failed
+        before (or during) parsing: the parsed design's name, else the
+        AIGER comment name, else the generator spec."""
+        name = getattr(req.design, "name", None)
+        if name:
+            return name
+        if req.aiger_bytes is not None:
+            return aiger.peek_name(req.aiger_bytes) or "aiger"
+        return f"{req.dataset}:{req.bits}"
+
+    def _pop_followers(self, key) -> list[_Request]:
+        if key is None:
+            return []
+        with self._lock:
+            return self._coalesce.pop(key, [])
+
     def _fail(self, req: _Request, exc: Exception) -> None:
-        self._finish(
-            req,
-            ServiceResult(
-                req_id=req.req_id, name="?", status="error", accuracy=0.0,
-                core_accuracy=0.0, verdict=None, cached=False, num_nodes=0,
-                num_edges=0, timings={}, error=f"{type(exc).__name__}: {exc}",
-            ),
-        )
+        err = f"{type(exc).__name__}: {exc}"
+
+        def _errored(r: _Request) -> ServiceResult:
+            return ServiceResult(
+                req_id=r.req_id, name=self._req_name(r), status="error",
+                accuracy=0.0, core_accuracy=0.0, verdict=None, cached=False,
+                num_nodes=0, num_edges=0, timings={}, error=err,
+            )
+
+        self._finish(req, _errored(req))
+        # a coalesced leader takes its followers down with it — they share
+        # the execution, so they share the failure
+        for f in self._pop_followers(req.key):
+            self._finish(f, _errored(f))
 
     def _prepare_one(self, req: _Request) -> None:
         try:
@@ -302,6 +526,7 @@ class VerificationService:
             design = req.design
             if design is None and req.aiger_bytes is not None:
                 design = aiger.loads(req.aiger_bytes)
+                req.design = design     # failed tickets stay attributable
             cfg = P.PipelineConfig(
                 dataset=req.dataset,
                 bits=req.bits,
@@ -312,8 +537,8 @@ class VerificationService:
                 seed=req.seed,
                 stream_dtype=self.config.stream_dtype,
             )
-            key = None
-            if design is None or isinstance(design, A.AIG):
+            key = req.key
+            if key is None and (design is None or isinstance(design, A.AIG)):
                 with span("service.hash"):
                     h = (
                         aiger.structural_hash(design)
@@ -344,58 +569,166 @@ class VerificationService:
                         ),
                     )
                     return
+                if self.config.coalesce:
+                    # in-flight coalescing: if the same key is already being
+                    # executed, ride along as a follower — the leader's
+                    # _finalize/_fail finishes us too.  (A follower that
+                    # registers just after the leader popped the entry
+                    # simply becomes a new leader: duplicated work, never a
+                    # hang or a wrong result.)
+                    with self._lock:
+                        followers = self._coalesce.get(key)
+                        if followers is not None:
+                            followers.append(req)
+                            self.metrics.counter("service.coalesced").inc()
+                            return
+                        self._coalesce[key] = []
+                        req.key = key
             with span("service.prepare", req_id=req.req_id):
                 prep = P.prepare(cfg, design)
                 items = items_from_prepared(req.req_id, prep)
             t_prep = time.perf_counter() - t0
             self.metrics.histogram("service.prepare_s").observe(t_prep)
             self._device_q.put(
-                (req, key, prep, items, t_prep, time.perf_counter())
+                _Prepared(req, key, prep, items, t_prep, time.perf_counter())
             )
             self.metrics.gauge("service.queue_depth").set(self._device_q.qsize())
         except Exception as e:  # noqa: BLE001 — request-scoped failure
             self._fail(req, e)
 
-    def _device_loop(self) -> None:
-        while True:
+    def _drain_device_q(self, block: bool) -> Optional[list[_Prepared]]:
+        """Everything currently queued (non-blocking past the first get).
+
+        Called between every two device calls — this re-drain is what
+        admits a freshly-prepared request into the next pack.  Returns
+        None when the service is stopping and nothing is queued.
+        """
+        out: list[_Prepared] = []
+        if block:
             try:
-                entry = self._device_q.get(timeout=0.05)
+                out.append(self._device_q.get(timeout=0.05))
             except queue.Empty:
                 if self._stop:
-                    return
+                    return None
+        while True:
+            try:
+                out.append(self._device_q.get_nowait())
+            except queue.Empty:
+                break
+        if out:
+            self.metrics.gauge("service.queue_depth").set(self._device_q.qsize())
+        return out
+
+    def _admit(self, prepared: _Prepared, pool: SlotPool,
+               streamed: list) -> None:
+        """Slot a prepared request's items into the admission pool."""
+        inf = _Inflight(
+            req=prepared.req,
+            key=prepared.key,
+            prep=prepared.prep,
+            remaining=len(prepared.items),
+            out=np.zeros(prepared.prep.num_nodes, dtype=np.int32),
+            t_prep=prepared.t_prep,
+            t_enq=prepared.t_enq,
+        )
+        self.metrics.histogram("service.queue_wait_s").observe(
+            time.perf_counter() - prepared.t_enq
+        )
+        for it in prepared.items:
+            shape = self.scheduler.bucket_of(it)
+            slot = _Slot(inf, it)
+            if self.scheduler._oversized(shape):
+                heapq.heappush(
+                    streamed, (prepared.req.priority, next(self._seq), slot)
+                )
+            else:
+                pool.admit(shape, prepared.req.priority, next(self._seq), slot)
+
+    def _scatter(self, slot: _Slot, pred: np.ndarray, t_inf: float) -> None:
+        """Fold one item's predictions into its request; finalize when the
+        request's last item lands (host post-processing goes back to the
+        pool so the device worker moves straight on)."""
+        inf = slot.inflight
+        it = slot.item
+        inf.out[it.global_ids[: it.num_core]] = pred[: it.num_core]
+        inf.t_infer += t_inf
+        inf.remaining -= 1
+        if inf.remaining == 0 and not inf.failed:
+            timings = {"prepare": inf.t_prep, "inference": inf.t_infer}
+            self._pool.submit(
+                self._finalize, inf.req, inf.key, inf.prep, inf.out, timings
+            )
+
+    def _fail_inflight(self, inf: _Inflight, exc: Exception) -> None:
+        if not inf.failed:
+            inf.failed = True
+            self._fail(inf.req, exc)
+
+    def _device_loop(self) -> None:
+        """Continuous batching: one device call per iteration, re-draining
+        the queue in between.  The pool orders items by (priority, seq);
+        each iteration runs one pack of the globally most-urgent bucket —
+        so an item prepared while a pack was on the device joins the next
+        pack of its bucket mid-flight instead of waiting out a wave.
+        """
+        pool = SlotPool()
+        streamed: list = []             # (priority, seq, _Slot) heap
+        while True:
+            idle = len(pool) == 0 and not streamed
+            drained = self._drain_device_q(block=idle)
+            if drained is None:
+                return
+            for prepared in drained:
+                self._admit(prepared, pool, streamed)
+            shape = pool.best_bucket()
+            if shape is None and not streamed:
                 continue
-            batch = [entry]
-            while len(batch) < self.config.max_batch_requests:
+            self.metrics.gauge("service.pending_items").set(
+                len(pool) + len(streamed)
+            )
+            if streamed and (
+                shape is None or streamed[0][:2] < pool.head_key(shape)
+            ):
+                # oversized item: partitioned + streamed through the shared
+                # runner (one whole-item unit; its sub-launches batch
+                # internally at stream_capacity)
+                _, _, slot = heapq.heappop(streamed)
+                if slot.inflight.failed:
+                    continue
                 try:
-                    batch.append(self._device_q.get_nowait())
-                except queue.Empty:
-                    break
+                    t0 = time.perf_counter()
+                    self.metrics.histogram("service.admission_s").observe(
+                        t0 - slot.inflight.t_enq
+                    )
+                    preds = self.scheduler.run_one(slot.item)
+                    t_inf = time.perf_counter() - t0
+                    self.metrics.histogram("service.infer_s").observe(t_inf)
+                    key = (slot.inflight.req.req_id, slot.item.part_index)
+                    self._scatter(slot, preds[key], t_inf)
+                except Exception as e:  # noqa: BLE001
+                    self._fail_inflight(slot.inflight, e)
+                continue
+            taken = pool.take(shape, self.scheduler.capacity)
+            slots = [s for (_, _, s) in taken if not s.inflight.failed]
+            if not slots:
+                continue
             try:
                 t0 = time.perf_counter()
-                for entry_ in batch:
-                    self.metrics.histogram("service.queue_wait_s").observe(
-                        t0 - entry_[5]
+                for s in slots:
+                    self.metrics.histogram("service.admission_s").observe(
+                        t0 - s.inflight.t_enq
                     )
-                self.metrics.gauge("service.queue_depth").set(
-                    self._device_q.qsize()
-                )
-                all_items = [it for (_, _, _, items, _, _) in batch for it in items]
-                preds = self.scheduler.run_items(all_items)
+                preds = self.scheduler.run_pack([s.item for s in slots], shape)
                 t_inf = time.perf_counter() - t0
                 self.metrics.histogram("service.infer_s").observe(t_inf)
+                for s in slots:
+                    self._scatter(
+                        s, preds[(s.inflight.req.req_id, s.item.part_index)],
+                        t_inf,
+                    )
             except Exception as e:  # noqa: BLE001
-                for req, *_ in batch:
-                    self._fail(req, e)
-                continue
-            for req, key, prep, items, t_prep, _t_enq in batch:
-                out = np.zeros(prep.num_nodes, dtype=np.int32)
-                for it in items:
-                    p = preds[(req.req_id, it.part_index)]
-                    out[it.global_ids[: it.num_core]] = p[: it.num_core]
-                timings = {"prepare": t_prep, "inference": t_inf}
-                # host post-processing goes back to the pool: the device
-                # worker moves on to the next batch immediately
-                self._pool.submit(self._finalize, req, key, prep, out, timings)
+                for s in slots:
+                    self._fail_inflight(s.inflight, e)
 
     def _finalize(self, req, key, prep, pred: np.ndarray, timings: dict) -> None:
         try:
@@ -409,7 +742,7 @@ class VerificationService:
             timings["total"] = time.perf_counter() - req.t_submit
             result = ServiceResult(
                 req_id=req.req_id,
-                name=getattr(prep.design, "name", "?"),
+                name=getattr(prep.design, "name", None) or self._req_name(req),
                 status=verdict.status if verdict is not None else "classified",
                 accuracy=acc,
                 core_accuracy=acc,
@@ -422,6 +755,21 @@ class VerificationService:
             if key is not None:
                 self.cache.put(key, result)
             self._finish(req, result)
+            # coalesced followers share the leader's execution: finish them
+            # from the same result, marked cached (it IS a shared outcome)
+            for f in self._pop_followers(key):
+                self._finish(
+                    f,
+                    dataclasses.replace(
+                        result,
+                        req_id=f.req_id,
+                        cached=True,
+                        timings={
+                            **timings,
+                            "total": time.perf_counter() - f.t_submit,
+                        },
+                    ),
+                )
         except Exception as e:  # noqa: BLE001
             self._fail(req, e)
 

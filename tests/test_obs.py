@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import json
 import threading
+import time
 
 import jax
 import pytest
@@ -232,6 +233,48 @@ def test_session_counter_isolation(rand_params):
     c2b = s2.report().session["counters"]
     assert c1b == c1                           # s2's run invisible to s1
     assert c2b["session.route.partitioned"] == 1
+
+
+def test_service_queue_depth_gauge_tracks_both_sides(rand_params):
+    """``service.queue_depth`` is set on enqueue AND after drain: while
+    the device is held mid-pack the gauge's max records the backlog, and
+    once the loop drains it the live value returns to zero."""
+    from repro.service import VerificationService
+
+    svc = VerificationService(rand_params, num_partitions=1,
+                              prepare_workers=2, _warn=False)
+    inner = svc.scheduler.runner
+    gate = threading.Event()
+    entered = threading.Event()
+
+    class _Gated:
+        def __getattr__(self, name):
+            return getattr(inner, name)
+
+        def __call__(self, batch):
+            entered.set()
+            assert gate.wait(timeout=60.0)
+            return inner(batch)
+
+    svc.scheduler.runner = _Gated()
+    try:
+        tickets = [svc.submit(dataset="csa", bits=4, seed=0, verify=False)]
+        assert entered.wait(timeout=30.0)      # device held mid-pack
+        tickets += [svc.submit(dataset="csa", bits=4, seed=s, verify=False)
+                    for s in (1, 2)]
+        depth = svc.metrics.gauge("service.queue_depth")
+        deadline = time.perf_counter() + 30.0
+        while depth.max < 1:                   # both enqueues land behind R1
+            assert time.perf_counter() < deadline, "enqueue never moved gauge"
+            time.sleep(0.005)
+    finally:
+        gate.set()
+    for t in tickets:
+        assert svc.result(t, timeout=60.0).status == "classified"
+    # the drain side wrote too: backlog consumed, gauge back to zero
+    assert depth.max >= 1
+    assert depth.value == 0
+    svc.close()
 
 
 def test_cache_hit_root_is_tagged_and_gate_exempt(rand_params):

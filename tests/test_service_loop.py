@@ -1,0 +1,302 @@
+"""The continuous-batching device loop (`repro.service.server`).
+
+Fast lane, untrained params: these tests pin the loop's *scheduling*
+semantics, not verification accuracy —
+
+  * mid-flight admission: a request prepared while a pack is on the
+    device joins the very next same-bucket pack instead of waiting out
+    a wave barrier;
+  * priority lanes: a later priority-0 submission runs before an earlier
+    priority-5 one under a saturated queue;
+  * compile-ahead warmup: zero cold compiles after warmup, probe-gated;
+  * per-tenant admission caps: AdmissionError at the cap, slot freed on
+    completion;
+  * in-flight coalescing: concurrent same-key submissions share one
+    execution, followers finish cached;
+  * failed tickets carry an attributable name (never "?").
+
+Device-side timing is made deterministic by gating the BucketRunner: the
+device thread blocks inside its first call until the test releases it,
+so "arrives mid-flight" is a guaranteed interleaving, not a race.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.core import gnn
+from repro.service import AdmissionError, SlotPool, VerificationService
+from repro.service.bucketing import BucketShape, dummy_item
+
+
+@pytest.fixture(scope="module")
+def rand_params():
+    return gnn.init_params(gnn.GNNConfig(), jax.random.key(0))
+
+
+def make_service(params, **overrides):
+    overrides.setdefault("num_partitions", 1)
+    overrides.setdefault("prepare_workers", 2)
+    return VerificationService(params, _warn=False, **overrides)
+
+
+class GatedRunner:
+    """Wraps a BucketRunner: every call blocks until ``release()``.
+
+    Lets a test hold the device mid-pack, queue more requests, and then
+    observe exactly how the loop admits them.
+    """
+
+    def __init__(self, inner):
+        self._inner = inner
+        self._gate = threading.Event()
+        self.entered = threading.Event()     # set when a call is blocking
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def release(self):
+        self._gate.set()
+
+    def __call__(self, batch):
+        self.entered.set()
+        assert self._gate.wait(timeout=60.0), "gate never released"
+        return self._inner(batch)
+
+
+def wait_for(cond, timeout=30.0, msg="condition"):
+    t0 = time.perf_counter()
+    while not cond():
+        if time.perf_counter() - t0 > timeout:
+            raise AssertionError(f"timed out waiting for {msg}")
+        time.sleep(0.005)
+
+
+# ---------------------------------------------------------------------------
+# SlotPool unit semantics (no service needed)
+# ---------------------------------------------------------------------------
+
+def test_slot_pool_orders_by_priority_then_arrival():
+    pool = SlotPool()
+    a, b = BucketShape(64, 128), BucketShape(128, 256)
+    pool.admit(a, 1, 0, "a0")
+    pool.admit(b, 0, 1, "b0")      # later arrival, higher priority
+    pool.admit(a, 1, 2, "a1")
+    assert len(pool) == 3
+    assert pool.best_bucket() == b
+    assert pool.take(b, 4) == [(0, 1, "b0")]
+    assert pool.best_bucket() == a
+    assert [p for (_, _, p) in pool.take(a, 1)] == ["a0"]
+    assert [p for (_, _, p) in pool.take(a, 4)] == ["a1"]
+    assert len(pool) == 0 and pool.best_bucket() is None
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: mid-flight admission, priority lanes
+# ---------------------------------------------------------------------------
+
+def test_mid_flight_request_joins_next_pack(rand_params):
+    """R2/R3 are prepared while R1's pack is on the device; when it
+    returns, they share ONE pack (capacity 2) instead of arriving as
+    separate waves."""
+    svc = make_service(rand_params, capacity=2)
+    gate = GatedRunner(svc.scheduler.runner)
+    svc.scheduler.runner = gate
+    try:
+        t1 = svc.submit(dataset="csa", bits=4, seed=0, verify=False)
+        assert gate.entered.wait(timeout=30.0)   # R1's pack is in flight
+        t2 = svc.submit(dataset="csa", bits=4, seed=1, verify=False)
+        t3 = svc.submit(dataset="csa", bits=4, seed=2, verify=False)
+        wait_for(lambda: svc._device_q.qsize() >= 2, msg="R2+R3 prepared")
+    finally:
+        gate.release()
+    rs = [svc.result(t, timeout=60.0) for t in (t1, t2, t3)]
+    assert [r.status for r in rs] == ["classified"] * 3
+    log = list(svc.scheduler.pack_log)
+    assert [sorted(ids) for (_, ids, _) in log] == [[t1], sorted([t2, t3])]
+    assert [fill for (_, _, fill) in log] == [0.5, 1.0]
+    svc.close()
+
+
+def test_priority_lane_overtakes_under_saturation(rand_params):
+    """With the device saturated, a priority-0 submission made AFTER a
+    priority-5 one still runs first."""
+    svc = make_service(rand_params, capacity=1)
+    gate = GatedRunner(svc.scheduler.runner)
+    svc.scheduler.runner = gate
+    try:
+        t0 = svc.submit(dataset="csa", bits=4, seed=0, verify=False)
+        assert gate.entered.wait(timeout=30.0)
+        t_slow = svc.submit(dataset="csa", bits=4, seed=1, verify=False,
+                            priority=5)
+        wait_for(lambda: svc._device_q.qsize() >= 1, msg="bulk queued")
+        t_fast = svc.submit(dataset="csa", bits=4, seed=2, verify=False,
+                            priority=0)
+        wait_for(lambda: svc._device_q.qsize() >= 2, msg="express queued")
+    finally:
+        gate.release()
+    for t in (t0, t_slow, t_fast):
+        svc.result(t, timeout=60.0)
+    order = [ids[0] for (_, ids, _) in svc.scheduler.pack_log]
+    assert order == [t0, t_fast, t_slow]
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Compile-ahead warmup: probe-gated zero cold compiles
+# ---------------------------------------------------------------------------
+
+def test_warmup_then_zero_cold_compiles(rand_params):
+    from repro.core import aig as A
+    from repro.kernels import ops
+
+    g = A.make_design("csa", 4).to_edge_graph()
+    shape = ops.padded_shape(g.num_nodes, g.num_edges,
+                             min_nodes=64, min_edges=128)
+    svc = make_service(rand_params, warmup=True, warmup_shapes=(shape,),
+                       capacity=2)
+    st = svc.stats()
+    assert svc.scheduler.runner.warmed
+    assert st["warm_compiles"] >= 1
+    assert st["warmup_s"] > 0.0
+    tickets = [svc.submit(dataset="csa", bits=4, seed=s, verify=False)
+               for s in range(4)]
+    for t in tickets:
+        assert svc.result(t, timeout=60.0).status == "classified"
+    st = svc.stats()
+    assert st["cold_compiles"] == 0, "a warmed bucket re-traced"
+    assert st["compile_count"] == st["warm_compiles"]
+    # the loop recorded slot occupancy and admission latency
+    assert st["obs"]["gauges"]["service.slot_occupancy"]["max"] > 0
+    assert st["obs"]["histograms"]["service.admission_s"]["count"] == 4
+    svc.close()
+
+
+def test_unwarmed_bucket_counts_cold(rand_params):
+    """The probe is live: warming shape A then submitting a shape-B
+    design must register a cold compile."""
+    svc = make_service(rand_params, warmup=True,
+                       warmup_shapes=((64, 128),))
+    t = svc.submit(dataset="csa", bits=6, seed=0, verify=False)
+    svc.result(t, timeout=60.0)
+    assert svc.stats()["cold_compiles"] >= 1
+    svc.close()
+
+
+def test_scheduler_warm_covers_stream_capacity():
+    """With bucket ceilings set, warm(stream=True) compiles BOTH slot
+    layouts, so the streamed route pays no cold jit either."""
+    params = gnn.init_params(gnn.GNNConfig(), jax.random.key(1))
+    from repro.service import ShapeBucketScheduler
+
+    sched = ShapeBucketScheduler(params, capacity=4, stream_capacity=2,
+                                 max_bucket_nodes=256, max_bucket_edges=512)
+    n = sched.warm([(64, 128)], stream=True)
+    assert n == 2                    # one trace per (bucket, capacity) layout
+    out = sched.run_pack([dummy_item(sched.runner.in_features)],
+                         BucketShape(64, 128))
+    assert sched.runner.cold_compile_count == 0
+    assert set(out) == {(-1, 0)}
+
+
+# ---------------------------------------------------------------------------
+# Admission control: tenant caps, coalescing
+# ---------------------------------------------------------------------------
+
+def test_tenant_cap_rejects_then_frees(rand_params):
+    svc = make_service(rand_params, max_inflight_per_tenant=2)
+    gate = GatedRunner(svc.scheduler.runner)
+    svc.scheduler.runner = gate
+    try:
+        t1 = svc.submit(dataset="csa", bits=4, seed=0, verify=False,
+                        tenant="acme")
+        t2 = svc.submit(dataset="csa", bits=4, seed=1, verify=False,
+                        tenant="acme")
+        with pytest.raises(AdmissionError):
+            svc.submit(dataset="csa", bits=4, seed=2, verify=False,
+                       tenant="acme")
+        # another tenant is unaffected by acme's saturation
+        t3 = svc.submit(dataset="csa", bits=4, seed=3, verify=False,
+                        tenant="bob")
+    finally:
+        gate.release()
+    for t in (t1, t2, t3):
+        svc.result(t, timeout=60.0)
+    # finishing freed the slots
+    t4 = svc.submit(dataset="csa", bits=4, seed=4, verify=False,
+                    tenant="acme")
+    svc.result(t4, timeout=60.0)
+    assert svc.metrics.counter("service.rejected").value == 1
+    svc.close()
+
+
+def test_concurrent_duplicates_coalesce_to_one_execution(rand_params):
+    svc = make_service(rand_params)
+    gate = GatedRunner(svc.scheduler.runner)
+    svc.scheduler.runner = gate
+    try:
+        lead = svc.submit(dataset="csa", bits=4, seed=0, verify=False)
+        assert gate.entered.wait(timeout=30.0)
+        followers = [svc.submit(dataset="csa", bits=4, seed=0, verify=False)
+                     for _ in range(3)]
+    finally:
+        gate.release()
+    r_lead = svc.result(lead, timeout=60.0)
+    r_follow = [svc.result(t, timeout=60.0) for t in followers]
+    assert not r_lead.cached
+    assert all(r.cached for r in r_follow)
+    assert {r.status for r in r_follow} == {r_lead.status}
+    assert {r.name for r in r_follow} == {r_lead.name}
+    # ids are per-ticket even though the execution was shared
+    assert sorted(r.req_id for r in r_follow) == sorted(followers)
+    assert svc.metrics.counter("service.coalesced").value == 3
+    assert svc.scheduler.runner.run_count == 1
+    svc.close()
+
+
+def test_coalesce_off_runs_every_request(rand_params):
+    svc = make_service(rand_params, coalesce=False)
+    gate = GatedRunner(svc.scheduler.runner)
+    svc.scheduler.runner = gate
+    try:
+        tickets = [svc.submit(dataset="csa", bits=4, seed=0, verify=False)
+                   for _ in range(2)]
+        assert gate.entered.wait(timeout=30.0)
+    finally:
+        gate.release()
+    rs = [svc.result(t, timeout=60.0) for t in tickets]
+    # second request hits the result cache only if the first finished
+    # before it was admitted; it must NOT be coalesced
+    assert svc.metrics.counter("service.coalesced").value == 0
+    assert rs[0].status == "classified"
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Failure attribution (no more name="?")
+# ---------------------------------------------------------------------------
+
+def test_failed_generated_request_is_attributable(rand_params):
+    svc = make_service(rand_params)
+    t = svc.submit(dataset="no-such-family", bits=8)
+    r = svc.result(t, timeout=60.0)
+    assert r.status == "error" and r.error
+    assert r.name == "no-such-family:8"
+    svc.close()
+
+
+def test_failed_aiger_request_uses_comment_name(rand_params):
+    svc = make_service(rand_params)
+    bad = b"not an aiger header\nc\ngroot-name revision_42\n"
+    t = svc.submit(aiger_bytes=bad)
+    r = svc.result(t, timeout=60.0)
+    assert r.status == "error"
+    assert r.name == "revision_42"
+    # nameless garbage still gets the format tag, never "?"
+    t2 = svc.submit(aiger_bytes=b"also not aiger\n")
+    r2 = svc.result(t2, timeout=60.0)
+    assert r2.status == "error" and r2.name == "aiger"
+    svc.close()
