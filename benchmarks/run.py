@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 from pathlib import Path
@@ -47,7 +48,15 @@ def main(argv=None):
     )
     from benchmarks import common
     from repro.kernels.plan_cache import PLAN_CACHE
-    from repro.obs import REGISTRY, Tracer
+    from repro.obs import REGISTRY, Sampler, Tracer
+    from repro.obs.flight import DUMP_DIR_ENV
+    from repro.obs.regress import SCHEMA_VERSION, host_info
+
+    if args.json:
+        # failed tickets' flight records land next to the BENCH JSONs, so
+        # CI's artifact upload carries the forensic trail too
+        common.ART.mkdir(parents=True, exist_ok=True)
+        os.environ.setdefault(DUMP_DIR_ENV, str(common.ART))
 
     t0 = time.time()
     suites = [
@@ -74,22 +83,37 @@ def main(argv=None):
         pc0 = PLAN_CACHE.snapshot()
         reg0 = REGISTRY.snapshot()
         tracer = Tracer()
+        # per-suite JSONL time series over the process registry (queue
+        # depth, executor gauges, stage latencies) — uploaded by CI next
+        # to the BENCH JSONs
+        sampler = (
+            Sampler(common.ART / f"SAMPLER_{key}.jsonl", REGISTRY,
+                    interval_s=0.5)
+            if args.json else None
+        )
         t_suite = time.time()
         err = None
         try:
             # every Session the suite builds (trace=False) emits its spans
             # into this suite-scoped tracer via the active-tracer fallback
             with tracer.activate():
+                if sampler is not None:
+                    sampler.start()
                 fn(quick)
         except Exception as e:  # noqa: BLE001
             err = repr(e)
             failed.append((name, err))
             print(f"[FAIL] {name}: {e}")
+        finally:
+            if sampler is not None:
+                sampler.stop()
         if args.json:
             pc1 = PLAN_CACHE.snapshot()
             lookups = (pc1.hits - pc0.hits) + (pc1.builds - pc0.builds)
             common.ART.mkdir(parents=True, exist_ok=True)
             payload = {
+                "schema": SCHEMA_VERSION,
+                "host": host_info(),
                 "suite": key,
                 "title": name,
                 "ok": err is None,

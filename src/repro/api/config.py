@@ -99,6 +99,13 @@ class SessionConfig:
     #: and the prefetch loop pay nothing.  Deliberately NOT part of
     #: ``cache_key_part`` — tracing never changes results.
     trace: bool = False
+    #: flight recorder: last N per-ticket forensic records retained in the
+    #: session ring (``Session.flights()`` / ``stats()["flights"]``)
+    flight_records: int = 256
+    #: where failed tickets dump their flight record as JSON at failure
+    #: time (None: fall back to $REPRO_FLIGHT_DUMP_DIR, else no dump).
+    #: Not outcome-relevant, so not in ``cache_key_part``.
+    flight_dump_dir: Optional[str] = None
 
     #: deprecated write-only alias of ``backend`` — consumed (and reset to
     #: None) at construction so ``dataclasses.replace(cfg, backend=...)``
@@ -169,6 +176,8 @@ class SessionConfig:
             warmup_shapes=self.warmup_shapes,
             coalesce=self.coalesce,
             max_inflight_per_tenant=self.max_inflight_per_tenant,
+            flight_records=self.flight_records,
+            flight_dump_dir=self.flight_dump_dir,
         )
 
     @classmethod

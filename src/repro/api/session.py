@@ -29,6 +29,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import datetime
+import itertools
 import threading
 import time
 from typing import Optional
@@ -43,12 +44,14 @@ from repro.core.verify import VerifyResult
 from repro.kernels.plan_cache import PLAN_CACHE
 from repro.obs import (
     REGISTRY,
+    FlightRecorder,
     MetricsRegistry,
     Report,
     TraceHandle,
     Tracer,
     current_tracer,
     fold_into,
+    record_from_marks,
 )
 from repro.service.cache import ResultCache
 
@@ -175,9 +178,13 @@ class _SessionObs:
     """One session's observability state: a private metrics registry, an
     optional tracer, and the baselines report() deltas against."""
 
-    def __init__(self, trace: bool):
+    def __init__(self, trace: bool, flight_records: int = 256):
         self.metrics = MetricsRegistry()
         self.tracer: Optional[Tracer] = Tracer() if trace else None
+        # one forensic ring across both paths: the service engine records
+        # its tickets here, sync verify records its calls (negative ids)
+        self.flights = FlightRecorder(flight_records)
+        self.flight_ids = itertools.count(1)     # sync-verify id space (<0)
         # deltas in report() are measured from session creation
         self.registry_baseline = REGISTRY.snapshot()
         self.plan_cache_baseline = PLAN_CACHE.snapshot()
@@ -197,7 +204,10 @@ class Session:
         self._params = params
         #: tracing + metrics state (``_obs`` lets :meth:`options` share the
         #: parent's, so a family of derived sessions traces one timeline)
-        self.obs = _obs if _obs is not None else _SessionObs(config.trace)
+        self.obs = (
+            _obs if _obs is not None
+            else _SessionObs(config.trace, config.flight_records)
+        )
         #: structural-hash result LRU: a resubmitted design under the same
         #: config skips prepare + inference + verification entirely
         self.results = ResultCache(config.cache_capacity)
@@ -333,6 +343,7 @@ class Session:
         t_start = time.perf_counter()
         met = self.obs.metrics
         met.counter("session.verifies").inc()
+        marks = [("submit", t_start)]
         # with our own tracer: activate it (and restore whatever was
         # active after); without: nullcontext, so a surrounding tracer —
         # e.g. the benchmark harness's — still receives every span below
@@ -359,6 +370,9 @@ class Session:
                 if hit is not None:
                     met.counter("session.cache_hits").inc()
                     root.set(cached=True)
+                    self._record_sync_flight(
+                        marks, hit.name, hit.status, cached=True
+                    )
                     return dataclasses.replace(
                         hit,
                         cached=True,
@@ -373,6 +387,7 @@ class Session:
                     prep = P.prepare(pcfg, design)
                     decision, plan = _route_with_plan(prep, self.config)
                     plan_sp.set(mode=decision.mode, k=decision.k)
+                marks.append(("prepared", time.perf_counter()))
                 met.counter(f"session.route.{decision.mode}").inc()
                 met.histogram("session.prepare_s").observe(
                     sum(prep.timings.values())
@@ -399,17 +414,32 @@ class Session:
                         )
                 pc_after = PLAN_CACHE.snapshot()
                 t_inf = time.perf_counter() - t0
+                marks.append(("inferred", time.perf_counter()))
                 met.histogram("session.infer_s").observe(t_inf)
                 if exec_stats:
+                    # model-vs-actual memory accounting: high-water gauges,
+                    # not counters — a peak must never accumulate
+                    for g in ("modeled_peak_bytes", "actual_peak_bytes"):
+                        if exec_stats.get(g):
+                            met.gauge(f"exec.{g}").set(exec_stats[g])
                     # per-run executor stats accumulate into the session
                     # registry (ints -> exec.* counters, timings ->
                     # histograms) and the raw totals report() exposes
-                    fold_into(met, "exec", exec_stats)
+                    fold_into(met, "exec", {
+                        k_: v_ for k_, v_ in exec_stats.items()
+                        if not k_.endswith("peak_bytes")
+                    })
                     for k_, v_ in exec_stats.items():
                         if isinstance(v_, (int, float)) and not isinstance(v_, bool):
-                            self.obs.exec_totals[k_] = (
-                                self.obs.exec_totals.get(k_, 0) + v_
-                            )
+                            if k_.endswith("peak_bytes") or k_ == "model_drift":
+                                # peaks/ratios keep their high-water mark
+                                self.obs.exec_totals[k_] = max(
+                                    self.obs.exec_totals.get(k_, 0), v_
+                                )
+                            else:
+                                self.obs.exec_totals[k_] = (
+                                    self.obs.exec_totals.get(k_, 0) + v_
+                                )
 
                 with tracer.span("verdict"):
                     t0 = time.perf_counter()
@@ -467,7 +497,31 @@ class Session:
         met.histogram("session.total_s").observe(time.perf_counter() - t_start)
         if self.obs.tracer is not None and root.span_id is not None:
             result.trace = TraceHandle(self.obs.tracer, root.span_id)
+        self._record_sync_flight(marks, result.name, result.status,
+                                 decision=decision)
         return result
+
+    def _record_sync_flight(self, marks, name, status, *, cached=False,
+                            decision=None) -> None:
+        """Sync ``verify`` leaves the same forensic trail as a service
+        ticket (negative ids keep the two spaces from colliding in the
+        shared ring).  A sync call has no device queue, so its timeline is
+        submit -> prepared -> inferred -> done."""
+        marks.append(("done", time.perf_counter()))
+        streamed = decision is not None and decision.mode == "streamed"
+        self.obs.flights.record(record_from_marks(
+            -next(self.obs.flight_ids), name, status, marks,
+            cached=cached,
+            streamed=streamed,
+            bucket=decision.buckets[-1] if streamed and decision.buckets else None,
+            capacity=self.config.stream_capacity if streamed else None,
+        ))
+
+    def flights(self, *, failures_only: bool = False) -> list:
+        """The session's retained :class:`~repro.obs.FlightRecord` ring —
+        sync verifies (negative ids) and service tickets alike, oldest
+        first."""
+        return self.obs.flights.records(failures_only=failures_only)
 
     # -- the async (service-batched) path ------------------------------------
 
@@ -485,7 +539,7 @@ class Session:
 
                 self._service = VerificationService(
                     self.params, self.config.service_config(), _warn=False,
-                    metrics=self.obs.metrics,
+                    metrics=self.obs.metrics, flights=self.obs.flights,
                 )
             return self._service
 
@@ -583,12 +637,30 @@ class Session:
                 "warm_compiles": s.warm_compiles,
                 "warmup_s": s.warmup_s,
             }
+        session_snap = self.obs.metrics.snapshot()
+        gauges = session_snap["gauges"]
+        memory_model = None
+        modeled = gauges.get("exec.modeled_peak_bytes", {}).get("max", 0)
+        if modeled:
+            # the validation loop for the analytic model driving choose_k:
+            # drift ~1.0 means routing decisions rest on honest numbers
+            actual = gauges.get("exec.actual_peak_bytes", {}).get("max", 0)
+            memory_model = {
+                "modeled_peak_bytes": int(modeled),
+                "actual_peak_bytes": int(actual),
+                "drift": actual / modeled,
+            }
         return Report(
             created=datetime.datetime.now(datetime.timezone.utc).isoformat(
                 timespec="seconds"
             ),
-            session=self.obs.metrics.snapshot(),
+            session=session_snap,
             process=REGISTRY.delta(self.obs.registry_baseline),
+            # high-water marks of the process gauges (value + max) — the
+            # counter-only `process` delta above cannot carry peaks
+            process_gauges=REGISTRY.snapshot()["gauges"] or None,
+            memory_model=memory_model,
+            flights=self.obs.flights.stats() if len(self.obs.flights) else None,
             plan_cache=plan_cache,
             results_cache={
                 "hits": rc.hits, "misses": rc.misses,

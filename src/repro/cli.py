@@ -4,6 +4,8 @@
     repro verify csa:32 booth:16 --backend groot_fused --partitions 8
     repro explain design.aig --budget-mb 64   # the routing decision only
     repro serve --designs csa:8,csa:16 --repeat 2   # the batched service
+    repro serve ... --metrics-port 9100   # + /metrics + /stats endpoint
+    repro top 127.0.0.1:9100              # live view of a running service
 
 ``verify``/``explain`` accept AIGER files (``.aig``/``.aag``) and
 ``family:bits`` generator specs interchangeably.  ``explain`` needs no
@@ -116,6 +118,58 @@ def cmd_verify(args) -> int:
     return 1 if bad else 0
 
 
+def cmd_top(args) -> int:
+    """Live terminal view of a running service: poll its ``/stats`` JSON
+    endpoint (``repro serve --metrics-port N``) and render the hot
+    numbers.  ``--iterations`` bounds the loop (tests; one-shot peeks)."""
+    import json
+    import time
+    import urllib.request
+
+    url = args.url.rstrip("/")
+    if "://" not in url:
+        url = f"http://{url}"
+    n = 0
+    while args.iterations is None or n < args.iterations:
+        try:
+            with urllib.request.urlopen(f"{url}/stats", timeout=5) as resp:
+                stats = json.load(resp)
+        except OSError as e:
+            print(f"repro top: cannot reach {url}/stats ({e})", file=sys.stderr)
+            return 1
+        svc = stats.get("service", stats)
+        obs = svc.get("obs", {})
+        gauges, hists = obs.get("gauges", {}), obs.get("histograms", {})
+        flights = svc.get("flights", {})
+        cache = svc.get("cache", {})
+        if isinstance(cache, str):       # dataclass stringified by the server
+            cache = {}
+        if n:
+            print()
+        print(f"-- repro top @ {time.strftime('%H:%M:%S')} ({url}) --")
+        print(f"queue depth {gauges.get('service.queue_depth', {}).get('value', 0):>4}"
+              f"  (peak {gauges.get('service.queue_depth', {}).get('max', 0)})"
+              f"   slots {gauges.get('service.slot_occupancy', {}).get('value', 0):>3}"
+              f"  (peak {gauges.get('service.slot_occupancy', {}).get('max', 0)})")
+        print(f"device calls {svc.get('device_calls', 0):>5}"
+              f"   compiles {svc.get('compile_count', 0):>4}"
+              f"   cold {svc.get('cold_compiles', 0):>3}"
+              f"   streamed {svc.get('streamed_items', 0):>4}")
+        print(f"flights: {flights.get('recorded', 0)} recorded, "
+              f"{flights.get('failures', 0)} failed, "
+              f"{flights.get('retained', 0)}/{flights.get('capacity', 0)} retained")
+        for stage in ("prepare_s", "queue_wait_s", "infer_s", "verify_s"):
+            h = hists.get(f"service.{stage}")
+            if h:
+                print(f"  {stage:<13} n={h.get('count', 0):<6} "
+                      f"p50={h.get('p50', 0) * 1e3:8.2f} ms  "
+                      f"p95={h.get('p95', 0) * 1e3:8.2f} ms")
+        n += 1
+        if args.iterations is None or n < args.iterations:
+            time.sleep(args.interval)
+    return 0
+
+
 def main(argv: Optional[list] = None) -> int:
     argv = sys.argv[1:] if argv is None else list(argv)
     if argv and argv[0] == "serve":
@@ -153,6 +207,16 @@ def main(argv: Optional[list] = None) -> int:
     # listed for --help only; dispatched above before parsing
     sub.add_parser("serve", help="run the batched verification service "
                                  "(args pass through to repro.service.server)")
+
+    t = sub.add_parser("top", help="live view of a running service "
+                                   "(polls serve --metrics-port's /stats)")
+    t.add_argument("url", nargs="?", default="127.0.0.1:9100",
+                   help="host:port of the service's metrics endpoint")
+    t.add_argument("--interval", type=float, default=2.0,
+                   help="seconds between polls")
+    t.add_argument("--iterations", type=int, default=None,
+                   help="stop after N polls (default: run until ^C)")
+    t.set_defaults(fn=cmd_top)
 
     args = ap.parse_args(argv)
     return args.fn(args)

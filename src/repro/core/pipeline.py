@@ -390,13 +390,20 @@ def infer_streaming(
             min_nodes=executor.min_nodes, min_edges=executor.min_edges,
         )
     before = dataclasses.replace(executor.stats)
-    pred = executor.run_plan(plan, prep.feats)
+    pred = executor.run_plan(plan, prep.feats, gnn_cfg=cfg.gnn)
     stats = dataclasses.asdict(executor.stats.delta(before))
     stats["peak_packed_memory_bytes"] = plan.peak_batch_memory_bytes(
         cfg.gnn, executor.capacity
     )
     stats["num_buckets"] = plan.num_buckets
     stats["chosen_k"] = prep.num_partitions
+    # model drift: the analytic model on real launched shapes over the
+    # plan-time prediction choose_k budgeted against.  >1 means launches
+    # were bigger than modeled (the budget was optimistic); kept next to
+    # chosen_k because that is the decision this ratio validates.
+    modeled, actual = stats["modeled_peak_bytes"], stats["actual_peak_bytes"]
+    if modeled:
+        stats["model_drift"] = actual / modeled
     return pred, stats
 
 

@@ -58,6 +58,11 @@ class StreamStats:
     device_s: float = 0.0         # device execution + readback time
     wall_s: float = 0.0           # end-to-end streamed time
     max_queue_depth: int = 0      # prefetch occupancy high-water mark
+    # model-vs-actual memory accounting (high-water marks): what the plan
+    # modeled as the packed-launch peak vs the model evaluated on the
+    # REAL launched padded shapes — the validation loop for choose_k
+    modeled_peak_bytes: int = 0
+    actual_peak_bytes: int = 0
 
     @property
     def overlap_s(self) -> float:
@@ -66,7 +71,8 @@ class StreamStats:
 
     def delta(self, before: "StreamStats") -> "StreamStats":
         """Per-run view: this (cumulative) snapshot minus ``before``.
-        ``max_queue_depth`` keeps the later high-water mark."""
+        High-water marks (``max_queue_depth``, ``*_peak_bytes``) keep the
+        later value — a peak has no meaningful difference."""
         return StreamStats(
             runs=self.runs - before.runs,
             batches=self.batches - before.batches,
@@ -79,6 +85,8 @@ class StreamStats:
             device_s=self.device_s - before.device_s,
             wall_s=self.wall_s - before.wall_s,
             max_queue_depth=self.max_queue_depth,
+            modeled_peak_bytes=self.modeled_peak_bytes,
+            actual_peak_bytes=self.actual_peak_bytes,
         )
 
 
@@ -136,13 +144,26 @@ class StreamingExecutor:
 
     # -- execution ----------------------------------------------------------
 
-    def run_plan(self, plan: PartitionPlan, features: np.ndarray) -> np.ndarray:
+    def run_plan(self, plan: PartitionPlan, features: np.ndarray,
+                 gnn_cfg=None) -> np.ndarray:
         """Stream every partition batch; returns (num_nodes,) int32 global
         predictions with every core row written (halo rows are computed
-        under their owning partition)."""
+        under their owning partition).
+
+        ``gnn_cfg`` enables model-vs-actual memory accounting: the plan's
+        modeled packed-launch peak and the same analytic model evaluated
+        on every REAL launched padded shape land in ``stats`` and the
+        ``exec.modeled_peak_bytes`` / ``exec.actual_peak_bytes`` gauges.
+        """
         t_wall = time.perf_counter()
         schedule = plan.schedule(self.capacity)
         self.buckets_seen.update(plan.buckets)
+        if gnn_cfg is not None:
+            modeled = plan.peak_batch_memory_bytes(gnn_cfg, self.capacity)
+            self.stats.modeled_peak_bytes = max(
+                self.stats.modeled_peak_bytes, modeled
+            )
+            REGISTRY.gauge("exec.modeled_peak_bytes").set(modeled)
         out = np.zeros(plan.num_nodes, dtype=np.int32)
         compiles_before = self.runner.compile_count
         tracer = current_tracer()
@@ -156,7 +177,7 @@ class StreamingExecutor:
                 # synchronous fallback (also the degenerate 0/1-batch case)
                 for shape, indices in schedule:
                     batch = self._pack_timed(plan, indices, features, shape)
-                    self._launch(batch, out)
+                    self._launch(batch, out, gnn_cfg)
             else:
                 q: queue.Queue = queue.Queue(maxsize=self.prefetch)
                 stop = threading.Event()  # consumer died: unblock producer
@@ -201,7 +222,7 @@ class StreamingExecutor:
                             break
                         if isinstance(got, BaseException):
                             raise got
-                        self._launch(got, out)
+                        self._launch(got, out, gnn_cfg)
                 finally:
                     # a launch failure leaves the producer blocked mid-put;
                     # the stop flag makes its bounded put give up promptly
@@ -268,7 +289,23 @@ class StreamingExecutor:
         REGISTRY.histogram("exec.pack_s").observe(dt)
         return batch
 
-    def _launch(self, batch: PackedBatch, out: np.ndarray) -> None:
+    def _launch(self, batch: PackedBatch, out: np.ndarray,
+                gnn_cfg=None) -> None:
+        if gnn_cfg is not None:
+            # the same analytic model, evaluated on the padded shapes this
+            # launch ACTUALLY ships (capacity*n_pad rows, capacity*e_pad
+            # edges) — staged bytes are separately measured as bytes_h2d
+            from repro.core.pipeline import memory_model_bytes
+
+            actual = memory_model_bytes(
+                int(batch.arrays["x"].shape[0]),
+                int(batch.arrays["edge_src"].shape[0]),
+                gnn_cfg,
+            )
+            self.stats.actual_peak_bytes = max(
+                self.stats.actual_peak_bytes, actual
+            )
+            REGISTRY.gauge("exec.actual_peak_bytes").set(actual)
         t0 = time.perf_counter()
         with span("exec.launch", parts=len(batch.items)):
             pred = self.runner(batch.arrays)

@@ -64,17 +64,24 @@ def check_trace(data: dict, require: list[str], coverage: float) -> list[str]:
     return failures
 
 
-def measure_overhead(design: str = "csa-16", repeats: int = 3) -> dict:
+def measure_overhead(design: str = "csa-16", repeats: int = 3,
+                     sample: bool = True) -> dict:
     """Best-of-N traced vs untraced verify wall time on a small design.
 
     Uses fresh params and distinct designs-by-cache-key so neither arm
     benefits from the other's result cache; plan/jit caches are warmed by
     an untimed run first, so the comparison isolates tracer cost rather
-    than compile noise.
+    than compile noise.  Both arms run with the flight recorder active
+    (every ``Session`` records flights) and, with ``sample=True``, a live
+    :class:`~repro.obs.export.Sampler` over the session registry — so the
+    gate bounds the cost of the FULL observability stack, not just spans.
     """
+    import os
+    import tempfile
     import time
 
     from repro.api import Session, SessionConfig
+    from repro.obs.export import Sampler
 
     import jax
 
@@ -88,17 +95,28 @@ def measure_overhead(design: str = "csa-16", repeats: int = 3) -> dict:
         kw = dict(dataset=fam, bits=int(bits or 16), verify=False,
                   use_cache=False)
         sess.verify(**kw)  # warm compile/plan caches, untimed
-        t = float("inf")
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            sess.verify(**kw)
-            t = min(t, time.perf_counter() - t0)
+        sampler = None
+        if sample:
+            fd, path = tempfile.mkstemp(suffix=".jsonl")
+            os.close(fd)
+            sampler = Sampler(path, sess.obs.metrics, interval_s=0.05).start()
+        try:
+            t = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                sess.verify(**kw)
+                t = min(t, time.perf_counter() - t0)
+        finally:
+            if sampler is not None:
+                sampler.stop()
+                os.unlink(sampler.path)
         return t
 
     untraced = best(False)
     traced = best(True)
     return {
         "design": design,
+        "repeats": repeats,
         "untraced_s": untraced,
         "traced_s": traced,
         "overhead": (traced - untraced) / untraced if untraced > 0 else 0.0,
@@ -130,8 +148,17 @@ def main(argv=None) -> int:
     )
     p.add_argument(
         "--overhead-design",
+        "--design",
+        dest="overhead_design",
         default="csa-16",
         help="design for the overhead micro-benchmark",
+    )
+    p.add_argument(
+        "--repeats",
+        type=int,
+        default=3,
+        help="timed verifies per arm of the overhead micro-benchmark "
+        "(best-of-N)",
     )
     args = p.parse_args(argv)
 
@@ -143,9 +170,10 @@ def main(argv=None) -> int:
     print(f"{args.trace}: {n_spans} spans", file=sys.stderr)
 
     if args.overhead_gate is not None:
-        m = measure_overhead(args.overhead_design)
+        m = measure_overhead(args.overhead_design, repeats=args.repeats)
         print(
-            f"overhead on {m['design']}: traced {m['traced_s'] * 1e3:.2f} ms "
+            f"overhead on {m['design']} (x{m['repeats']}, flights+sampler "
+            f"on): traced {m['traced_s'] * 1e3:.2f} ms "
             f"vs untraced {m['untraced_s'] * 1e3:.2f} ms "
             f"({m['overhead']:+.1%})",
             file=sys.stderr,

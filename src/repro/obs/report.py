@@ -12,7 +12,12 @@ previously scattered stats surfaces into one stable dict:
   * ``scheduler`` — ``SchedulerStats`` when the service engine is live;
   * ``exec``     — accumulated streaming-executor ``exec_stats``;
   * ``spans``    — the tracer's per-name wall-time summary when tracing
-    was on.
+    was on;
+  * ``process_gauges`` — process-registry gauges with their high-water
+    marks (peak queue depth / slot occupancy);
+  * ``memory_model``   — modeled vs actual packed-peak bytes + drift
+    ratio, validating the model that drives ``choose_k``;
+  * ``flights``  — flight-recorder summary when any ticket was recorded.
 
 ``to_dict()`` drops absent sections and sorts keys, so serialized
 reports diff cleanly across runs.
@@ -45,12 +50,23 @@ class Report:
     scheduler: Optional[dict] = None
     exec: Optional[dict] = None
     spans: Optional[dict] = None
+    #: process-registry gauges as {name: {value, max}} — the high-water
+    #: marks the counter-only ``process`` delta cannot carry
+    process_gauges: Optional[dict] = None
+    #: model-vs-actual packed-peak accounting ({modeled_peak_bytes,
+    #: actual_peak_bytes, drift}) validating the choose_k memory model
+    memory_model: Optional[dict] = None
+    #: flight-recorder summary (recorded/retained/failures + last record)
+    flights: Optional[dict] = None
 
     def to_dict(self) -> dict:
         out = {"created": self.created}
         for field in (
             "session",
             "process",
+            "process_gauges",
+            "memory_model",
+            "flights",
             "plan_cache",
             "results_cache",
             "scheduler",

@@ -345,6 +345,9 @@ class ShapeBucketScheduler:
         fill = len(chunk) / self.capacity
         self.pack_log.append((shape, [it.req_id for it in chunk], fill))
         self.metrics.gauge("service.slot_occupancy").set(fill)
+        # fill as a distribution, not just the last value: p50/p95 of
+        # pack utilisation is what the sampler/exporter trend over a run
+        self.metrics.histogram("service.pack_fill").observe(fill)
         REGISTRY.counter("scheduler.items_run").inc(len(chunk))
         return out
 

@@ -68,7 +68,8 @@ from repro.core import gnn
 from repro.core import pipeline as P
 from repro.core.verify import VerifyResult
 from repro.io import aiger
-from repro.obs import MetricsRegistry, span
+from repro.obs import FlightRecorder, MetricsRegistry, record_from_marks, span
+from repro.obs.flight import failed_stage_from_marks, failure_dump_dir
 from repro.service.bucketing import items_from_prepared
 from repro.service.cache import ResultCache
 from repro.service.scheduler import ShapeBucketScheduler, SlotPool
@@ -115,6 +116,11 @@ class ServiceConfig:
     # per-tenant admission cap: submit(tenant=...) raises AdmissionError
     # once that tenant has this many unfinished requests (None = unlimited)
     max_inflight_per_tenant: Optional[int] = None
+    # flight recorder: last N per-ticket forensic records kept in memory
+    # (stats()["flights"]); failed tickets additionally dump a JSON record
+    # to flight_dump_dir (or $REPRO_FLIGHT_DUMP_DIR) at failure time
+    flight_records: int = 256
+    flight_dump_dir: Optional[str] = None
 
     def cache_key_part(self) -> tuple:
         return (
@@ -154,6 +160,12 @@ class _Request:
     key: object = None                   # result-cache key, set during prepare
     event: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Optional[ServiceResult] = None
+    # flight-record facts, filled in as the ticket moves through stages
+    marks: list = dataclasses.field(default_factory=list)
+    bucket: Optional[tuple] = None       # (n_pad, e_pad) of the pack it rode
+    bucket_capacity: Optional[int] = None
+    streamed: bool = False
+    coalesced: bool = False
 
 
 @dataclasses.dataclass
@@ -204,6 +216,7 @@ class VerificationService:
 
     def __init__(self, params, config: Optional[ServiceConfig] = None,
                  _warn: bool = True, metrics: Optional[MetricsRegistry] = None,
+                 flights: Optional[FlightRecorder] = None,
                  **overrides):
         if _warn:
             import warnings
@@ -222,6 +235,12 @@ class VerificationService:
         # per-engine registry (a Session passes its own, so two live
         # sessions never read each other's service numbers)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # per-ticket forensic ring (a Session passes its own so
+        # Session.flights() sees both sync and service flights)
+        self.flights = (
+            flights if flights is not None
+            else FlightRecorder(config.flight_records)
+        )
         self.cache = ResultCache(config.cache_capacity)
         self.scheduler = ShapeBucketScheduler(
             params,
@@ -344,6 +363,7 @@ class VerificationService:
                 priority=priority,
                 tenant=tenant,
             )
+            req.marks.append(("submit", req.t_submit))
             self._requests[rid] = req
             if tenant is not None:
                 self._tenant_inflight[tenant] = (
@@ -388,6 +408,7 @@ class VerificationService:
             with self._lock:
                 followers = self._coalesce.get(key)
                 if followers is not None:
+                    req.coalesced = True
                     followers.append(req)
                     self.metrics.counter("service.coalesced").inc()
                     return True
@@ -445,6 +466,7 @@ class VerificationService:
         from repro.kernels.plan_cache import PLAN_CACHE
 
         s = self.scheduler.stats()
+        obs = self.metrics.snapshot(prefix="service.")
         return {
             "cache": self.cache.stats,
             "compile_count": s.compile_count,
@@ -463,13 +485,59 @@ class VerificationService:
             "plan_cache": PLAN_CACHE.snapshot(),
             # this engine's obs registry: admit counts, queue depth/wait,
             # per-stage latency histograms
-            "obs": self.metrics.snapshot(prefix="service."),
+            "obs": obs,
+            # high-water marks — the peaks last-value gauges silently lose
+            "peaks": {k: g["max"] for k, g in obs["gauges"].items()},
+            # per-ticket forensic ring (recorded/retained/failures + last)
+            "flights": self.flights.stats(),
         }
 
     # -- workers -------------------------------------------------------------
 
+    @staticmethod
+    def _mark(req: _Request, stage: str) -> None:
+        """Record a stage timestamp once per request (a multi-item request
+        hits the device several times; only the first admission counts)."""
+        if not any(s == stage for s, _ in req.marks):
+            req.marks.append((stage, time.perf_counter()))
+
+    def _record_flight(self, req: _Request, result: ServiceResult) -> None:
+        """One forensic record per finished ticket, built at the single
+        finish funnel so cache hits, coalesced followers, failures and
+        normal completions all leave a trail.  Failed tickets also dump
+        to disk immediately — the trail must survive the process."""
+        # which segment a failure died in is only derivable before the
+        # terminal mark lands
+        failed_stage = (
+            failed_stage_from_marks(req.marks)
+            if result.status == "error" else None
+        )
+        self._mark(req, "done")
+        rec = record_from_marks(
+            req.req_id,
+            result.name,
+            result.status,
+            req.marks,
+            failed_stage=failed_stage,
+            cached=result.cached and not req.coalesced,
+            coalesced=req.coalesced,
+            priority=req.priority,
+            tenant=req.tenant,
+            bucket=req.bucket,
+            capacity=req.bucket_capacity,
+            streamed=req.streamed,
+            error=result.error,
+        )
+        self.flights.record(rec)
+        if not rec.ok:
+            directory = failure_dump_dir(self.config.flight_dump_dir)
+            if directory:
+                self.flights.dump_failure(rec, directory)
+
     def _finish(self, req: _Request, result: ServiceResult) -> None:
         first = not req.event.is_set()
+        if first:
+            self._record_flight(req, result)
         req.result = result
         req.event.set()
         # bound the ticket table: a long-lived service must not retain one
@@ -579,6 +647,7 @@ class VerificationService:
                     with self._lock:
                         followers = self._coalesce.get(key)
                         if followers is not None:
+                            req.coalesced = True
                             followers.append(req)
                             self.metrics.counter("service.coalesced").inc()
                             return
@@ -589,6 +658,7 @@ class VerificationService:
                 items = items_from_prepared(req.req_id, prep)
             t_prep = time.perf_counter() - t0
             self.metrics.histogram("service.prepare_s").observe(t_prep)
+            self._mark(req, "prepared")
             self._device_q.put(
                 _Prepared(req, key, prep, items, t_prep, time.perf_counter())
             )
@@ -654,6 +724,7 @@ class VerificationService:
         inf.t_infer += t_inf
         inf.remaining -= 1
         if inf.remaining == 0 and not inf.failed:
+            self._mark(inf.req, "inferred")
             timings = {"prepare": inf.t_prep, "inference": inf.t_infer}
             self._pool.submit(
                 self._finalize, inf.req, inf.key, inf.prep, inf.out, timings
@@ -700,6 +771,8 @@ class VerificationService:
                     self.metrics.histogram("service.admission_s").observe(
                         t0 - slot.inflight.t_enq
                     )
+                    slot.inflight.req.streamed = True
+                    self._mark(slot.inflight.req, "admitted")
                     preds = self.scheduler.run_one(slot.item)
                     t_inf = time.perf_counter() - t0
                     self.metrics.histogram("service.infer_s").observe(t_inf)
@@ -718,6 +791,10 @@ class VerificationService:
                     self.metrics.histogram("service.admission_s").observe(
                         t0 - s.inflight.t_enq
                     )
+                    if s.inflight.req.bucket is None:
+                        s.inflight.req.bucket = (shape.n_pad, shape.e_pad)
+                        s.inflight.req.bucket_capacity = self.scheduler.capacity
+                    self._mark(s.inflight.req, "admitted")
                 preds = self.scheduler.run_pack([s.item for s in slots], shape)
                 t_inf = time.perf_counter() - t0
                 self.metrics.histogram("service.infer_s").observe(t_inf)
@@ -805,6 +882,16 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--train-bits", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=300)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve GET /metrics (Prometheus text) and "
+                         "GET /stats (JSON) on this port while running")
+    ap.add_argument("--sample", metavar="OUT.jsonl", default=None,
+                    help="append periodic JSONL registry snapshots "
+                         "(queue depth, slot occupancy, stage latencies)")
+    ap.add_argument("--sample-interval", type=float, default=0.5)
+    ap.add_argument("--flight-dump-dir", default=None,
+                    help="directory for failed tickets' flight-record dumps "
+                         "(default: $REPRO_FLIGHT_DUMP_DIR)")
     args = ap.parse_args(argv)
 
     # the CLI is a thin client of the façade: one Session owns the params,
@@ -817,9 +904,27 @@ def main(argv=None):
         capacity=args.capacity,
         prepare_workers=args.workers,
         max_bucket_nodes=args.max_bucket_nodes,
+        flight_dump_dir=args.flight_dump_dir,
     ))
     print(f"training groot-gnn on csa {args.train_bits}b ({args.epochs} epochs)...")
     sess.train("csa", args.train_bits, epochs=args.epochs)
+
+    metrics_server = None
+    sampler = None
+    if args.metrics_port is not None:
+        from repro.obs import start_metrics_server
+
+        metrics_server = start_metrics_server(
+            sess.obs.metrics, port=args.metrics_port, stats_fn=sess.stats
+        )
+        print(f"metrics: {metrics_server.url}/metrics  "
+              f"stats: {metrics_server.url}/stats")
+    if args.sample is not None:
+        from repro.obs import Sampler
+
+        sampler = Sampler(
+            args.sample, sess.obs.metrics, interval_s=args.sample_interval
+        ).start()
 
     t0 = time.perf_counter()
     results = []
@@ -848,6 +953,13 @@ def main(argv=None):
           f"buckets: {s['buckets']}  streamed: {s['streamed_items']}")
     print(f"cache: {s['cache'].hits} hits / {s['cache'].misses} misses "
           f"(rate {s['cache'].hit_rate:.0%})")
+    fl = s["flights"]
+    print(f"flights: {fl['recorded']} recorded, {fl['failures']} failed, "
+          f"{fl['retained']}/{fl['capacity']} retained")
+    if sampler is not None:
+        print(f"sampler: {sampler.stop()} snapshots -> {sampler.path}")
+    if metrics_server is not None:
+        metrics_server.close()
 
 
 if __name__ == "__main__":

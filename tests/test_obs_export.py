@@ -1,0 +1,348 @@
+"""Telemetry export (`repro.obs.export`) + regression sentry (`.regress`).
+
+Fast lane.  Pins the three export surfaces and the sentry's contract:
+
+  * Prometheus text round-trips: render -> parse -> same counter/gauge
+    values, dotted names sanitized, gauge high-water ``_max`` twins;
+  * the Sampler leaves at least one JSONL line even for a run shorter
+    than its interval, and every line is valid JSON with the snapshot
+    sections;
+  * ``MetricsServer`` answers a live scrape on ``/metrics`` and
+    ``/stats`` (what ``repro serve --metrics-port`` / ``repro top`` use);
+  * the regress sentry passes an unperturbed self-comparison, fails a
+    perturbed one *naming the metric and tolerance*, hard-fails on
+    schema mismatch, skips timing rules on host mismatch, and ``--bless``
+    installs a new baseline;
+  * model-vs-actual memory accounting: a streamed verify reports
+    ``modeled_peak_bytes`` / ``actual_peak_bytes`` / ``model_drift`` and
+    the session Report carries the ``memory_model`` block;
+  * ``repro.obs.check`` forwards ``--design``/``--repeats`` into the
+    overhead micro-benchmark.
+"""
+from __future__ import annotations
+
+import copy
+import json
+import time
+import urllib.request
+
+import jax
+import pytest
+
+from repro.core import gnn
+from repro.obs import (
+    MetricsRegistry,
+    Sampler,
+    parse_prometheus,
+    render_prometheus,
+    start_metrics_server,
+)
+from repro.obs import regress
+from repro.obs.export import sanitize_metric_name
+
+
+@pytest.fixture(scope="module")
+def rand_params():
+    return gnn.init_params(gnn.GNNConfig(), jax.random.key(0))
+
+
+def seeded_registry() -> MetricsRegistry:
+    reg = MetricsRegistry()
+    reg.counter("service.device_calls").inc(7)
+    g = reg.gauge("service.queue_depth")
+    g.set(3)
+    g.set(1)                                  # live value 1, high-water 3
+    h = reg.histogram("service.infer_s")
+    for v in (0.010, 0.020, 0.030, 0.040):
+        h.observe(v)
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# Prometheus rendering
+# ---------------------------------------------------------------------------
+
+def test_sanitize_metric_name():
+    assert sanitize_metric_name("service.queue-depth") == "service_queue_depth"
+    assert sanitize_metric_name("exec.h2d bytes") == "exec_h2d_bytes"
+    assert sanitize_metric_name("0weird").startswith("_")
+
+
+def test_prometheus_round_trip():
+    text = render_prometheus(seeded_registry())
+    parsed = parse_prometheus(text)
+    assert parsed["repro_service_device_calls_total"] == 7.0
+    # gauges export both the live value and the high-water twin
+    assert parsed["repro_service_queue_depth"] == 1.0
+    assert parsed["repro_service_queue_depth_max"] == 3.0
+    # histogram summary: count/sum plus quantile-labelled lines
+    assert parsed["repro_service_infer_s_count"] == 4.0
+    assert parsed["repro_service_infer_s_sum"] == pytest.approx(0.1)
+    assert parsed['repro_service_infer_s{quantile="0.50"}'] > 0.0
+    assert parsed['repro_service_infer_s{quantile="0.95"}'] >= (
+        parsed['repro_service_infer_s{quantile="0.50"}']
+    )
+    # every sample line must be within the exposition grammar
+    for line in text.splitlines():
+        assert line.startswith("#") or parse_prometheus(line), line
+
+
+def test_sampler_always_leaves_a_line(tmp_path):
+    reg = seeded_registry()
+    path = tmp_path / "samples.jsonl"
+    s = Sampler(path, reg, interval_s=30.0).start()   # run << interval
+    n = s.stop()
+    assert n >= 1                                     # the closing bookend
+    lines = [json.loads(x) for x in path.read_text().splitlines()]
+    assert len(lines) == n
+    last = lines[-1]
+    assert last["counters"]["service.device_calls"] == 7
+    assert last["gauges"]["service.queue_depth"]["max"] == 3
+    assert last["histograms"]["service.infer_s"]["count"] == 4
+    assert last["elapsed_s"] >= 0.0
+
+
+def test_sampler_samples_periodically(tmp_path):
+    reg = seeded_registry()
+    with Sampler(tmp_path / "s.jsonl", reg, interval_s=0.02,
+                 extra=lambda: {"pending": 5}) as s:
+        time.sleep(0.2)
+    assert s.samples >= 3
+    line = json.loads(
+        (tmp_path / "s.jsonl").read_text().splitlines()[0])
+    assert line["pending"] == 5                       # extra() merged in
+
+
+def test_metrics_server_scrape():
+    reg = seeded_registry()
+    srv = start_metrics_server(reg, stats_fn=lambda: {"tickets": 12})
+    try:
+        with urllib.request.urlopen(f"{srv.url}/metrics", timeout=10) as r:
+            assert r.status == 200
+            parsed = parse_prometheus(r.read().decode())
+        assert parsed["repro_service_device_calls_total"] == 7.0
+        # the scrape is live, not a snapshot-at-start
+        reg.counter("service.device_calls").inc(3)
+        with urllib.request.urlopen(f"{srv.url}/metrics", timeout=10) as r:
+            assert parse_prometheus(r.read().decode())[
+                "repro_service_device_calls_total"] == 10.0
+        with urllib.request.urlopen(f"{srv.url}/stats", timeout=10) as r:
+            assert json.loads(r.read()) == {"tickets": 12}
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{srv.url}/nope", timeout=10)
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# regression sentry
+# ---------------------------------------------------------------------------
+
+def bench_payload(**over) -> dict:
+    base = {
+        "schema": regress.SCHEMA_VERSION,
+        "host": regress.host_info(),
+        "suite": "service",
+        "ok": True,
+        "runtime_s": 10.0,
+        "report": {"plan_cache_hit_rate": 0.80},
+        "tables": [
+            {"mode": "service", "req_per_s": 40.0, "p95_ms": 120.0,
+             "cold_compiles": 0, "compiles": 3},
+            {"mode": "one-shot", "req_per_s": 10.0, "p95_ms": 300.0,
+             "cold_compiles": 0, "compiles": 3},
+        ],
+    }
+    base.update(over)
+    return base
+
+
+def test_flatten_keys_table_rows_by_tag():
+    flat = regress.flatten(bench_payload())
+    assert flat["tables.service.req_per_s"] == 40.0
+    assert flat["tables.one-shot.p95_ms"] == 300.0
+    assert flat["runtime_s"] == 10.0
+    assert flat["report.plan_cache_hit_rate"] == 0.80
+    assert "host.machine" not in " ".join(flat)       # fenced, not compared
+
+
+def test_compare_unperturbed_passes():
+    cmp = regress.compare(bench_payload(), bench_payload(), suite="svc")
+    assert cmp.ok and not cmp.skipped_timing
+    assert len(cmp.findings) > 0
+    table = regress.render_table(cmp)
+    assert "0 regression(s)" in table
+
+
+def test_compare_names_metric_and_tolerance_on_regression():
+    fresh = bench_payload()
+    fresh["tables"][0]["req_per_s"] = 20.0            # -50% > the 30% floor
+    cmp = regress.compare(fresh, bench_payload(), suite="svc")
+    assert not cmp.ok
+    bad = cmp.regressions[0]
+    assert bad.key == "tables.service.req_per_s"
+    assert bad.rule.kind == "min_ratio" and bad.rule.tol == 0.30
+    table = regress.render_table(cmp)
+    assert "tables.service.req_per_s" in table and "REGRESSION" in table
+    assert "-30%" in table                            # the tolerance, spelled out
+
+
+def test_compare_rules():
+    # runtimes may grow 50%, no further
+    slow = bench_payload(runtime_s=14.9)
+    assert regress.compare(slow, bench_payload(), suite="s").ok
+    slower = bench_payload(runtime_s=15.1)
+    assert not regress.compare(slower, bench_payload(), suite="s").ok
+    # cold_compiles must match exactly
+    cold = bench_payload()
+    cold["tables"][0]["cold_compiles"] = 1
+    cmp = regress.compare(cold, bench_payload(), suite="s")
+    assert [f.key for f in cmp.regressions] == ["tables.service.cold_compiles"]
+    # total compiles may shrink but never grow
+    grew = bench_payload()
+    grew["tables"][0]["compiles"] = 4
+    assert not regress.compare(grew, bench_payload(), suite="s").ok
+    shrank = bench_payload()
+    shrank["tables"][0]["compiles"] = 2
+    assert regress.compare(shrank, bench_payload(), suite="s").ok
+    # hit rates may sag 5 points
+    sagged = bench_payload(report={"plan_cache_hit_rate": 0.76})
+    assert regress.compare(sagged, bench_payload(), suite="s").ok
+    cratered = bench_payload(report={"plan_cache_hit_rate": 0.70})
+    assert not regress.compare(cratered, bench_payload(), suite="s").ok
+
+
+def test_schema_mismatch_is_a_hard_failure():
+    stale = bench_payload(schema=regress.SCHEMA_VERSION - 1)
+    with pytest.raises(ValueError, match="schema mismatch"):
+        regress.compare(bench_payload(), stale, suite="svc")
+
+
+def test_host_mismatch_skips_timing_rules_only():
+    other = bench_payload()
+    other["host"] = dict(other["host"], machine="arm64", device="tpu")
+    fresh = bench_payload(runtime_s=99.0)             # 10x slower...
+    fresh["tables"][0]["cold_compiles"] = 1           # ...and a counter break
+    cmp = regress.compare(fresh, other, suite="svc")
+    assert cmp.skipped_timing and "timing rules skipped" in cmp.note
+    # the runtime blowup is forgiven (different machine), the counter is not
+    assert [f.key for f in cmp.regressions] == ["tables.service.cold_compiles"]
+    with pytest.raises(ValueError, match="host mismatch"):
+        regress.compare(fresh, other, suite="svc", strict_host=True)
+
+
+def test_regress_cli_end_to_end(tmp_path, capsys):
+    fresh_p = tmp_path / "BENCH_service.json"
+    base_dir = tmp_path / "baselines"
+    fresh_p.write_text(json.dumps(bench_payload()))
+    # no baseline yet: skip with a notice, exit 0
+    assert regress.main([str(fresh_p), "--baseline", str(base_dir)]) == 0
+    assert "no baseline" in capsys.readouterr().out
+    # bless, then an unperturbed re-run passes
+    assert regress.main([str(fresh_p), "--baseline", str(base_dir),
+                         "--bless"]) == 0
+    assert (base_dir / "BENCH_service.json").exists()
+    assert regress.main([str(fresh_p), "--baseline", str(base_dir)]) == 0
+    # a perturbed run fails, naming the metric in the output
+    bad = bench_payload()
+    bad["tables"][0]["req_per_s"] = 1.0
+    fresh_p.write_text(json.dumps(bad))
+    assert regress.main([str(fresh_p), "--baseline", str(base_dir)]) == 1
+    assert "tables.service.req_per_s" in capsys.readouterr().out
+    # a suite that itself failed is a regression even if metrics pass
+    sick = bench_payload(ok=False, error="boom")
+    fresh_p.write_text(json.dumps(sick))
+    assert regress.main([str(fresh_p), "--baseline", str(base_dir)]) == 1
+    # schema mismatch is exit 2
+    stale = copy.deepcopy(bench_payload())
+    stale["schema"] = regress.SCHEMA_VERSION - 1
+    fresh_p.write_text(json.dumps(stale))
+    assert regress.main([str(fresh_p), "--baseline", str(base_dir)]) == 2
+
+
+def test_committed_baselines_match_sentry_schema():
+    """The blessed baselines in-repo must be diffable by this sentry."""
+    from pathlib import Path
+
+    base_dir = Path(__file__).resolve().parent.parent / "benchmarks" / "baselines"
+    paths = sorted(base_dir.glob("BENCH_*.json"))
+    assert paths, f"no blessed baselines under {base_dir}"
+    for p in paths:
+        payload = json.loads(p.read_text())
+        assert payload["schema"] == regress.SCHEMA_VERSION, p.name
+        assert payload["ok"] is True, p.name
+        assert payload["host"]["machine"], p.name
+        # self-comparison of a blessed payload is clean by construction
+        assert regress.compare(payload, payload, suite=p.name).ok
+
+
+# ---------------------------------------------------------------------------
+# model-vs-actual memory accounting
+# ---------------------------------------------------------------------------
+
+def test_streamed_verify_reports_memory_model(rand_params):
+    from repro.api import Session, SessionConfig
+
+    cfg = SessionConfig(num_partitions=4, stream_capacity=2)
+    with Session(rand_params, cfg) as sess:
+        r = sess.verify(dataset="csa", bits=16, verify=False, use_cache=False)
+        assert r.routing.mode == "streamed"
+        stats = r.exec_stats
+        assert stats["modeled_peak_bytes"] > 0
+        assert stats["actual_peak_bytes"] > 0
+        assert stats["model_drift"] == pytest.approx(
+            stats["actual_peak_bytes"] / stats["modeled_peak_bytes"])
+        # the model is an upper bound on a single-bucket plan, and actual
+        # should be the same order of magnitude (the whole point of the
+        # accounting is to catch this ratio drifting)
+        assert 0.01 < stats["model_drift"] <= 1.5
+        rep = sess.report()
+    mm = rep.memory_model
+    assert mm is not None
+    assert mm["modeled_peak_bytes"] >= stats["modeled_peak_bytes"]
+    assert mm["drift"] == pytest.approx(
+        mm["actual_peak_bytes"] / mm["modeled_peak_bytes"])
+    # peaks are gauges (high-water), never summed into process counters
+    assert "exec.modeled_peak_bytes" not in rep.process
+    d = rep.to_dict()
+    assert d["memory_model"] == mm
+    assert d["process_gauges"]["exec.modeled_peak_bytes"]["max"] > 0
+
+
+def test_full_mode_has_no_memory_model(rand_params):
+    from repro.api import Session, SessionConfig
+
+    with Session(rand_params, SessionConfig(num_partitions=1)) as sess:
+        r = sess.verify(dataset="csa", bits=4, verify=False, use_cache=False)
+        assert r.routing.mode == "full"
+        assert "modeled_peak_bytes" not in r.exec_stats
+        assert sess.report().memory_model is None
+
+
+# ---------------------------------------------------------------------------
+# obs.check CLI passthrough
+# ---------------------------------------------------------------------------
+
+def test_check_forwards_design_and_repeats(tmp_path, monkeypatch):
+    from repro.obs import check
+
+    trace = tmp_path / "t.json"
+    trace.write_text(json.dumps({"traceEvents": []}))
+    seen = {}
+
+    def fake_overhead(design, repeats=3):
+        seen.update(design=design, repeats=repeats)
+        return {"design": design, "repeats": repeats,
+                "untraced_s": 1.0, "traced_s": 1.01, "overhead": 0.01}
+
+    monkeypatch.setattr(check, "measure_overhead", fake_overhead)
+    monkeypatch.setattr(check, "check_trace", lambda *a: [])
+    rc = check.main([str(trace), "--overhead-gate", "0.05",
+                     "--design", "csa-8", "--repeats", "5"])
+    assert rc == 0
+    assert seen == {"design": "csa-8", "repeats": 5}
+    # --overhead-design remains valid spelling for the same destination
+    rc = check.main([str(trace), "--overhead-gate", "0.05",
+                     "--overhead-design", "csa-4"])
+    assert seen["design"] == "csa-4" and seen["repeats"] == 3
+    assert rc == 0

@@ -1,0 +1,253 @@
+"""Flight recorder (`repro.obs.flight`) + its service/session wiring.
+
+Fast lane, untrained params.  What is pinned here:
+
+  * the ring is bounded and thread-safe: N threads hammering ``record``
+    lose no updates and never exceed capacity (same for
+    ``Histogram.observe`` — the concurrent-metrics satellite);
+  * the stage-timeline contract: marks are monotonic and the derived
+    segment durations tile the timeline exactly
+    (``sum(stages) == total_s``);
+  * every completed or failed service ticket leaves a record — normal
+    completions carry bucket/capacity and a queue-wait segment, cache
+    hits are flagged ``cached``, coalesced followers ``coalesced``,
+    failures carry the attributable name + cause and dump a JSON
+    forensic file at failure time;
+  * sync ``Session.verify`` records flights too (negative ids), so
+    ``Session.flights()`` is one view over both paths.
+"""
+from __future__ import annotations
+
+import json
+import threading
+
+import jax
+import pytest
+
+from repro.core import gnn
+from repro.obs import FlightRecorder, record_from_marks
+from repro.obs.flight import stages_from_marks
+from repro.obs.metrics import MetricsRegistry
+from repro.service import VerificationService
+
+
+@pytest.fixture(scope="module")
+def rand_params():
+    return gnn.init_params(gnn.GNNConfig(), jax.random.key(0))
+
+
+def make_service(params, **overrides):
+    overrides.setdefault("num_partitions", 1)
+    overrides.setdefault("prepare_workers", 2)
+    return VerificationService(params, _warn=False, **overrides)
+
+
+def check_timeline(rec):
+    """The assertable contract: monotonic marks, stages tile the total."""
+    times = [t for _, t in rec.marks]
+    assert times == sorted(times), f"non-monotonic marks: {rec.marks}"
+    assert sum(rec.stages.values()) == pytest.approx(rec.total_s, abs=1e-9)
+    assert rec.total_s >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# unit: marks -> stages
+# ---------------------------------------------------------------------------
+
+def test_stages_tile_timeline_exactly():
+    marks = [("submit", 1.0), ("prepared", 1.25), ("admitted", 1.75),
+             ("inferred", 2.0), ("done", 2.125)]
+    stages, total = stages_from_marks(marks)
+    assert stages == {"prepare": 0.25, "queue_wait": 0.5, "infer": 0.25,
+                      "finalize": 0.125}
+    assert total == pytest.approx(1.125)
+    assert sum(stages.values()) == pytest.approx(total)
+
+
+def test_cache_hit_timeline_is_one_segment():
+    stages, total = stages_from_marks([("submit", 3.0), ("done", 3.5)])
+    assert stages == {"finalize": 0.5} and total == pytest.approx(0.5)
+
+
+def test_record_from_marks_derives_failed_stage():
+    # died after "prepared": the failing segment is the queue-wait
+    rec = record_from_marks(7, "x", "error",
+                            [("submit", 0.0), ("prepared", 1.0)],
+                            error="RuntimeError: boom")
+    assert rec.failed_stage == "queue_wait"
+    assert not rec.ok and rec.error == "RuntimeError: boom"
+    check_timeline(rec)
+    # an explicit failed_stage wins over derivation
+    rec2 = record_from_marks(8, "x", "error", [("submit", 0.0)],
+                             failed_stage="prepare")
+    assert rec2.failed_stage == "prepare"
+
+
+def test_record_to_dict_is_json_safe():
+    rec = record_from_marks(1, "csa:8", "verified",
+                            [("submit", 0.0), ("done", 0.25)],
+                            bucket=(64, 128), capacity=2, tenant="acme")
+    d = json.loads(json.dumps(rec.to_dict()))
+    assert d["bucket"] == [64, 128] and d["tenant"] == "acme"
+    assert d["marks"] == [["submit", 0.0], ["done", 0.25]]
+
+
+# ---------------------------------------------------------------------------
+# ring semantics + concurrency (the lost-update satellite)
+# ---------------------------------------------------------------------------
+
+def test_ring_bound_and_stats():
+    fr = FlightRecorder(capacity=4)
+    for i in range(10):
+        fr.record(record_from_marks(i, "d", "error" if i % 3 == 0 else "ok",
+                                    [("submit", 0.0), ("done", 1.0)]))
+    st = fr.stats()
+    assert len(fr) == 4 and st["retained"] == 4
+    assert st["recorded"] == 10 and st["dropped"] == 6
+    assert st["failures"] == 4                       # ids 0, 3, 6, 9
+    assert st["last"]["req_id"] == 9
+    # the ring keeps the newest records
+    assert [r.req_id for r in fr.records()] == [6, 7, 8, 9]
+    assert [r.req_id for r in fr.records(failures_only=True)] == [6, 9]
+
+
+def test_concurrent_flight_records_lose_nothing():
+    fr = FlightRecorder(capacity=64)
+    threads, per = 8, 250
+
+    def hammer(tid):
+        for i in range(per):
+            fr.record(record_from_marks(tid * per + i, "d", "ok",
+                                        [("submit", 0.0), ("done", 1.0)]))
+
+    ts = [threading.Thread(target=hammer, args=(t,)) for t in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    st = fr.stats()
+    assert st["recorded"] == threads * per           # no lost updates
+    assert st["retained"] == 64 == len(fr)           # bound respected
+    assert st["dropped"] == threads * per - 64
+
+
+def test_concurrent_histogram_observes_lose_nothing():
+    reg = MetricsRegistry()
+    h = reg.histogram("svc.latency_s")
+    threads, per = 8, 500
+
+    def hammer():
+        for i in range(per):
+            h.observe(i * 1e-4)
+
+    ts = [threading.Thread(target=hammer) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    s = h.summary()
+    assert s["count"] == threads * per               # count == observes
+    assert s["min"] >= 0.0 and s["max"] <= per * 1e-4
+    assert s["min"] <= s["p50"] <= s["p95"] <= s["max"]
+
+
+def test_dump_roundtrip(tmp_path):
+    fr = FlightRecorder(capacity=8)
+    fr.record(record_from_marks(0, "a", "verified",
+                                [("submit", 0.0), ("done", 1.0)]))
+    fr.record(record_from_marks(1, "b", "error", [("submit", 0.0)],
+                                error="ValueError: nope"))
+    path = tmp_path / "flights.json"
+    assert fr.dump(path) == 2
+    data = json.loads(path.read_text())
+    assert [d["req_id"] for d in data] == [0, 1]
+    assert fr.dump(path, failures_only=True) == 1
+
+
+# ---------------------------------------------------------------------------
+# service wiring: every ticket leaves a consistent record
+# ---------------------------------------------------------------------------
+
+def test_completed_tickets_yield_consistent_flights(rand_params):
+    svc = make_service(rand_params)
+    tickets = [svc.submit(dataset="csa", bits=4, seed=s, verify=False)
+               for s in range(3)]
+    for t in tickets:
+        assert svc.result(t, timeout=60.0).status == "classified"
+    recs = {r.req_id: r for r in svc.flights.records()}
+    assert set(tickets) <= set(recs)
+    for t in tickets:
+        rec = recs[t]
+        assert rec.ok and rec.status == "classified"
+        check_timeline(rec)
+        assert [s for s, _ in rec.marks] == [
+            "submit", "prepared", "admitted", "inferred", "done"
+        ]
+        # a full run has a queue-wait and all stage segments
+        assert set(rec.stages) == {"prepare", "queue_wait", "infer",
+                                   "finalize"}
+        assert rec.bucket is not None and rec.capacity == svc.config.capacity
+        assert not rec.cached and not rec.coalesced and not rec.streamed
+    st = svc.stats()
+    assert st["flights"]["recorded"] >= 3
+    assert st["flights"]["failures"] == 0
+    # the peaks satellite: gauge high-water marks surface in stats()
+    assert st["peaks"]["service.slot_occupancy"] > 0
+    svc.close()
+
+
+def test_cache_hit_and_coalesced_flights_are_flagged(rand_params):
+    svc = make_service(rand_params)
+    t1 = svc.submit(dataset="csa", bits=4, seed=0, verify=False)
+    svc.result(t1, timeout=60.0)
+    t2 = svc.submit(dataset="csa", bits=4, seed=0, verify=False)  # cache hit
+    assert svc.result(t2, timeout=60.0).cached
+    recs = {r.req_id: r for r in svc.flights.records()}
+    assert not recs[t1].cached
+    hit = recs[t2]
+    assert hit.cached and not hit.coalesced
+    check_timeline(hit)
+    assert [s for s, _ in hit.marks] == ["submit", "done"]
+    svc.close()
+
+
+def test_failed_ticket_flight_carries_name_cause_and_dumps(
+        rand_params, tmp_path):
+    svc = make_service(rand_params, flight_dump_dir=str(tmp_path))
+    t = svc.submit(dataset="no-such-family", bits=8)
+    r = svc.result(t, timeout=60.0)
+    assert r.status == "error"
+    rec = {x.req_id: x for x in svc.flights.records(failures_only=True)}[t]
+    assert rec.name == "no-such-family:8"            # attributable name
+    assert rec.error and "no-such-family" in rec.error
+    assert rec.failed_stage == "prepare"             # died before "prepared"
+    check_timeline(rec)
+    # dump-on-failure: the forensic trail survives the process
+    dump = tmp_path / f"flight_fail_{t}.json"
+    assert dump.exists()
+    payload = json.loads(dump.read_text())
+    assert payload["failure"]["req_id"] == t
+    assert payload["failure"]["error"] == rec.error
+    assert any(c["req_id"] == t for c in payload["context"])
+    assert svc.stats()["flights"]["failures"] >= 1
+    svc.close()
+
+
+def test_session_flights_cover_sync_and_async(rand_params):
+    from repro.api import Session, SessionConfig
+
+    with Session(rand_params, SessionConfig(flight_records=32)) as sess:
+        r = sess.verify(dataset="csa", bits=4, verify=False, use_cache=False)
+        assert r.status == "classified"
+        ticket = sess.submit(dataset="csa", bits=4, seed=1, verify=False)
+        sess.result(ticket, timeout=60.0)
+        flights = sess.flights()
+    ids = [f.req_id for f in flights]
+    assert -1 in ids                                  # the sync verify
+    assert ticket in ids                              # the service ticket
+    sync = next(f for f in flights if f.req_id == -1)
+    assert [s for s, _ in sync.marks] == ["submit", "prepared", "inferred",
+                                          "done"]
+    check_timeline(sync)
+    for f in flights:
+        check_timeline(f)
