@@ -1,0 +1,241 @@
+"""Failure-domain chaos gates: seeded fault injection, end to end.
+
+Three probe-gated scenarios (CI runs this suite in the full lane; the
+fast lane smoke-tests the same plan grammar via ``$REPRO_FAULT_PLAN`` on
+the quickstart):
+
+  * **chaos burst** (the acceptance workload): a 16-ticket mixed-width
+    burst through the batched service under a seeded FaultPlan — 20%
+    transient device-launch failures plus a deterministic fatal on the
+    one poisoned design.  Gate: every well-formed ticket completes with
+    status/accuracy/verdict identical to a fault-free baseline run of
+    the same burst; the poisoned ticket fails alone with an attributed
+    name and ``failed_stage``; every wait is bounded (no hangs).
+  * **resume**: a streamed verify killed mid-run by an injected fatal
+    restarts from the partition journal — strictly fewer partitions
+    re-execute, the final verdict matches the uninterrupted run, and the
+    journal directory is reclaimed on completion.
+  * **overhead**: with no plan installed a fault site is a single
+    attribute probe — gated at well under a microsecond per fire, so the
+    instrumented hot paths stay inside the stack's <5% observability
+    overhead budget.
+
+Retry/bisection *counts* are recorded but deliberately not gated:
+device-call ordering varies with thread timing, so the per-call
+probability draws are not run-stable.  The poisoned outcome IS
+deterministic (``match=poison`` fires on every launch that touches it).
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import dataclasses
+import tempfile
+import time
+from pathlib import Path
+
+from benchmarks.common import make_session, print_table, save_table, trained_params
+
+#: the seeded chaos plan the burst gate runs under (and the fast-lane CI
+#: smoke exports via $REPRO_FAULT_PLAN)
+CHAOS_PLAN = (
+    "service.device:p=0.2,kind=transient,seed=7;"
+    "service.device:every=1,match=poison,kind=fatal"
+)
+
+
+def _burst_specs(quick: bool) -> list:
+    """The well-formed half of the burst: mixed families and widths,
+    distinct seeds (so nothing coalesces or cache-hits)."""
+    if quick:
+        return [("csa", b, s) for b in (6, 8) for s in (0, 1)] + \
+               [("booth", 6, s) for s in (0, 1, 2)]
+    return [("csa", b, s) for b in (6, 8, 10) for s in (0, 1, 2)] + \
+           [("booth", b, s) for b in (6, 8, 10) for s in (0, 1)]
+
+
+def _poisoned_design():
+    from repro.core import aig as A
+
+    d = A.csa_multiplier(6)
+    return dataclasses.replace(d, name="poison_csa6")
+
+
+def _run_burst(params, specs, poison, *, plan=None, deadline_s=120.0):
+    """Submit the full burst (well-formed specs + the poisoned design)
+    through a fresh service engine; returns (good results in submission
+    order, poison result, row)."""
+    from repro import faults
+
+    ctx = faults.injected(plan) if plan else contextlib.nullcontext()
+    with make_session(params, num_partitions=1, capacity=4,
+                      prepare_workers=4, launch_retries=6,
+                      retry_backoff_s=0.01) as sess:
+        with ctx:
+            t0 = time.perf_counter()
+            tickets = [
+                sess.submit(dataset=fam, bits=bits, seed=seed,
+                            deadline_s=deadline_s)
+                for fam, bits, seed in specs
+            ]
+            t_poison = sess.submit(design=poison, seed=999,
+                                   deadline_s=deadline_s)
+            good = [sess.result(t, timeout=600) for t in tickets]
+            bad = sess.result(t_poison, timeout=600)
+            wall = time.perf_counter() - t0
+        fails = [f for f in sess.flights(failures_only=True)
+                 if f.name == "poison_csa6"]
+        # per-session registry, fresh at construction — raw reads ARE deltas
+        counters = sess.obs.metrics.snapshot()["counters"]
+    row = {
+        "mode": "chaos" if plan else "baseline",
+        "requests": len(specs) + 1,
+        "wall_s": wall,
+        "errors": sum(r.status == "error" for r in good) +
+                  (bad.status == "error"),
+        "retries": counters.get("service.retries", 0),
+        "bisections": counters.get("service.bisections", 0),
+        "deadline_exceeded": counters.get("service.deadline_exceeded", 0),
+        "worker_deaths": counters.get("service.worker_deaths", 0),
+    }
+    return good, bad, fails, row
+
+
+def _outcome(r) -> tuple:
+    return (r.status, round(float(r.accuracy), 12), r.verdict)
+
+
+def chaos_burst_gate(params, quick: bool) -> list:
+    specs = _burst_specs(quick)
+    base_good, base_bad, _, base_row = _run_burst(
+        params, specs, _poisoned_design()
+    )
+    assert base_row["errors"] == 0, (
+        f"fault-free baseline must be clean, got "
+        f"{[r.error for r in base_good + [base_bad] if r.error]}"
+    )
+
+    good, bad, fails, row = _run_burst(
+        params, specs, _poisoned_design(), plan=CHAOS_PLAN
+    )
+    mismatches = [
+        (spec, _outcome(b), _outcome(c))
+        for spec, b, c in zip(specs, base_good, good)
+        if _outcome(b) != _outcome(c)
+    ]
+    assert not mismatches, (
+        f"chaos gate: {len(mismatches)} well-formed tickets diverged from "
+        f"the fault-free run: {mismatches[:3]}"
+    )
+    assert bad.status == "error" and "FatalFault" in bad.error, (
+        f"chaos gate: poisoned design must fail, got {bad.status!r} "
+        f"({bad.error!r})"
+    )
+    assert bad.name == "poison_csa6", bad.name
+    assert fails and fails[-1].failed_stage == "infer", (
+        f"chaos gate: poisoned failure not attributed in the flight ring "
+        f"(records: {fails})"
+    )
+    assert row["errors"] == 1, (
+        f"chaos gate: blast radius leaked — {row['errors']} errors for one "
+        f"poisoned design"
+    )
+    assert row["worker_deaths"] == 0 and row["deadline_exceeded"] == 0
+    return [base_row, row]
+
+
+def resume_gate(params, quick: bool) -> list:
+    from repro import faults
+
+    bits = 10 if quick else 12
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="repro_chaos_ckpt_") as ckpt:
+        def session():
+            return make_session(params, num_partitions=6, bits=bits,
+                                stream_capacity=1, stream_prefetch=0,
+                                checkpoint_dir=ckpt)
+
+        t0 = time.perf_counter()
+        with session() as sess:
+            want = sess.verify(dataset="csa", bits=bits, use_cache=False)
+        total = want.exec_stats["partitions"]
+        rows.append({"mode": "uninterrupted", "partitions": total,
+                     "resumed": 0, "status": want.status,
+                     "wall_s": time.perf_counter() - t0})
+        assert total >= 3, f"resume gate premise: need >=3 launches, got {total}"
+
+        # the "crash": a fatal fault partway through the launch sequence
+        with session() as sess, faults.injected("exec.launch:nth=2,kind=fatal"):
+            try:
+                sess.verify(dataset="csa", bits=bits, use_cache=False)
+                raise AssertionError("injected fatal did not surface")
+            except faults.FatalFault:
+                pass
+        committed = len(list(Path(ckpt).glob("*/part_*.npz")))
+        assert 0 < committed < total, (
+            f"resume gate premise: crash must land mid-run "
+            f"({committed}/{total} committed)"
+        )
+
+        t0 = time.perf_counter()
+        with session() as sess:
+            got = sess.verify(dataset="csa", bits=bits, use_cache=False)
+        resumed = got.exec_stats["resumed_partitions"]
+        rows.append({"mode": "resumed", "partitions": got.exec_stats["partitions"],
+                     "resumed": resumed, "status": got.status,
+                     "wall_s": time.perf_counter() - t0})
+        assert resumed == committed, (resumed, committed)
+        assert got.exec_stats["partitions"] == total - resumed, (
+            "resume gate: restart must execute ONLY the unfinished partitions"
+        )
+        assert _outcome(got) == _outcome(want), (
+            f"resume gate: verdict drift {_outcome(got)} vs {_outcome(want)}"
+        )
+        assert not any(Path(ckpt).iterdir()), "journal not reclaimed"
+    return rows
+
+
+def overhead_gate(quick: bool) -> list:
+    from repro import faults
+
+    faults.uninstall()
+    n = 50_000 if quick else 200_000
+    fire = faults.fire
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fire("exec.launch")
+    total = time.perf_counter() - t0
+    ns = total / n * 1e9
+    assert ns < 2000, (
+        f"overhead gate: inactive fault site costs {ns:.0f} ns/fire "
+        f"(budget: 2000 ns — the site must be a cheap no-op probe)"
+    )
+    return [{"mode": "inactive-site", "fires": n, "ns_per_fire": ns}]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    params = trained_params("csa", 8)
+
+    svc_rows = chaos_burst_gate(params, args.quick)
+    res_rows = resume_gate(params, args.quick)
+    ovh_rows = overhead_gate(args.quick)
+
+    print_table("chaos burst: seeded faults vs fault-free baseline", svc_rows)
+    print_table("crash-safe resume (partition journal)", res_rows)
+    print_table("inactive fault-site overhead", ovh_rows)
+    save_table("chaos_service", svc_rows)
+    save_table("chaos_resume", res_rows)
+    save_table("chaos_overhead", ovh_rows)
+    print(f"\nchaos burst survived: {svc_rows[1]['requests'] - 1} clean under "
+          f"{CHAOS_PLAN!r} ({svc_rows[1]['retries']} retries, "
+          f"{svc_rows[1]['bisections']} bisections); resume re-ran "
+          f"{res_rows[1]['partitions']}/{res_rows[0]['partitions']} "
+          f"partitions; inactive site {ovh_rows[0]['ns_per_fire']:.0f} ns")
+
+
+if __name__ == "__main__":
+    main()

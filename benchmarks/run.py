@@ -38,6 +38,7 @@ def main(argv=None):
 
     from benchmarks import (
         bench_accuracy,
+        bench_chaos,
         bench_features,
         bench_grouped,
         bench_memory,
@@ -69,6 +70,8 @@ def main(argv=None):
         ("service", "verification service (repro.service)", bench_service.main),
         ("partitioned", "partitioned streaming executor (repro.exec)",
          bench_partitioned.main),
+        ("chaos", "failure-domain chaos gates (repro.faults)",
+         bench_chaos.main),
     ]
     if args.suites:
         known = {k for k, _, _ in suites}

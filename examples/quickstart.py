@@ -17,6 +17,10 @@ ap.add_argument("--quick", action="store_true",
 ap.add_argument("--trace", metavar="OUT.json", default=None,
                 help="record every verify below and write a Chrome-trace "
                      "JSON (derived sessions share the base tracer)")
+ap.add_argument("--chaos", action="store_true",
+                help="seeded fault-injection smoke: transient device "
+                     "faults through the service path must be retried "
+                     "away without changing the result")
 args = ap.parse_args()
 BITS = 16 if args.quick else 32
 EPOCHS = 120 if args.quick else 300
@@ -68,3 +72,19 @@ if args.trace:
     rep = sess.report()
     print(f"\n7) observability: {rep!r}")
     print(f"   trace written to {args.trace}")
+
+if args.chaos:
+    from repro import faults
+
+    print("\n8) chaos smoke: two injected transient device faults, retried "
+          "away (repro.faults)...")
+    chaos = sess.options(launch_retries=3, retry_backoff_s=0.01)
+    with faults.injected("service.device:every=1,kind=transient,max_fires=2,seed=5"):
+        ticket = chaos.submit(bits=8, verify=False)
+        rr = chaos.result(ticket, timeout=300)
+    chaos.close()
+    assert rr.status == "classified", f"chaos smoke failed: {rr.error}"
+    retried = chaos.obs.metrics.snapshot()["counters"].get("service.retries", 0)
+    assert retried == 2, f"expected exactly 2 replayed transients, saw {retried}"
+    print(f"   survived {retried} injected faults; status {rr.status!r}, "
+          f"accuracy {rr.accuracy:.2%}")

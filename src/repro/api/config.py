@@ -107,6 +107,27 @@ class SessionConfig:
     #: Not outcome-relevant, so not in ``cache_key_part``.
     flight_dump_dir: Optional[str] = None
 
+    # -- failure domains (repro.faults + service deadlines/retries) ---------
+    #: fault-injection plan for chaos runs: a :class:`repro.faults.FaultPlan`
+    #: or its spec string (``"site:p=0.1,kind=transient;..."``).  Installed
+    #: process-wide when the Session is constructed; None leaves whatever
+    #: ``$REPRO_FAULT_PLAN`` installed (usually: nothing).  Never cached-on:
+    #: faults perturb execution, not the verdict a ticket WOULD produce.
+    fault_plan: Optional[object] = None
+    #: default per-ticket wall-clock budget (seconds) for the service path;
+    #: expired tickets fail with DeadlineExceeded instead of hanging.
+    #: None = no deadline.  Per-submit ``deadline_s=`` overrides win.
+    deadline_s: Optional[float] = None
+    #: transient device-launch failures replayed per ticket (exponential
+    #: backoff, seeded jitter) before the failure is surfaced
+    launch_retries: int = 2
+    retry_backoff_s: float = 0.05
+    #: crash-safe resume for streamed runs: journal per-partition core
+    #: predictions under this directory (keyed by design structural hash);
+    #: ``resume=False`` wipes any prior journal instead of restoring it
+    checkpoint_dir: Optional[str] = None
+    resume: bool = True
+
     #: deprecated write-only alias of ``backend`` — consumed (and reset to
     #: None) at construction so ``dataclasses.replace(cfg, backend=...)``
     #: never sees a stale conflicting alias
@@ -149,6 +170,8 @@ class SessionConfig:
             stream_capacity=self.stream_capacity,
             stream_prefetch=self.stream_prefetch,
             stream_dtype=self.stream_dtype,
+            checkpoint_dir=self.checkpoint_dir,
+            resume=self.resume,
         )
 
     def service_config(self):
@@ -178,6 +201,9 @@ class SessionConfig:
             max_inflight_per_tenant=self.max_inflight_per_tenant,
             flight_records=self.flight_records,
             flight_dump_dir=self.flight_dump_dir,
+            deadline_s=self.deadline_s,
+            launch_retries=self.launch_retries,
+            retry_backoff_s=self.retry_backoff_s,
         )
 
     @classmethod
@@ -200,6 +226,8 @@ class SessionConfig:
             memory_budget_bytes=cfg.memory_budget_bytes,
             stream_capacity=cfg.stream_capacity,
             stream_prefetch=cfg.stream_prefetch,
+            checkpoint_dir=cfg.checkpoint_dir,
+            resume=cfg.resume,
         )
 
     def cache_key_part(self) -> tuple:

@@ -202,6 +202,14 @@ class Session:
             config = dataclasses.replace(config, **overrides)
         self.config = config
         self._params = params
+        if config.fault_plan is not None:
+            # chaos sessions: activate the configured fault plan for the
+            # whole process (fire sites are global).  Installing at
+            # construction — not per verify — keeps the hot path at one
+            # None-check when no plan is configured.
+            from repro import faults
+
+            faults.install(config.fault_plan)
         #: tracing + metrics state (``_obs`` lets :meth:`options` share the
         #: parent's, so a family of derived sessions traces one timeline)
         self.obs = (
@@ -546,7 +554,8 @@ class Session:
     def submit(self, design=None, *, dataset: Optional[str] = None,
                bits: Optional[int] = None, seed: Optional[int] = None,
                verify: bool = True, signed: Optional[bool] = None,
-               priority: int = 1, tenant: Optional[str] = None) -> int:
+               priority: int = 1, tenant: Optional[str] = None,
+               deadline_s: Optional[float] = None) -> int:
         """Async verification through the batched service engine
         (continuous batching into shape-bucketed packs, compile-ahead
         warmup, overlap of prepare/device/verify across requests); returns
@@ -555,7 +564,9 @@ class Session:
         ``priority`` orders the device pool (lower = sooner; 0 is the
         express lane).  ``tenant`` attributes the request for per-tenant
         admission caps (``max_inflight_per_tenant``) — a tenant at its cap
-        gets :class:`repro.service.AdmissionError` here.
+        gets :class:`repro.service.AdmissionError` here.  ``deadline_s``
+        overrides the config's per-ticket wall-clock budget; an expired
+        ticket fails with ``DeadlineExceeded`` instead of hanging.
 
         AIGER bytes/paths are handed to the engine unparsed: parsing runs
         on the prepare pool, so a malformed file yields a per-ticket
@@ -575,6 +586,7 @@ class Session:
             signed=signed,
             priority=priority,
             tenant=tenant,
+            deadline_s=deadline_s,
         )
 
     def warm(self, shapes: Optional[tuple] = None) -> int:

@@ -1,1 +1,6 @@
-from repro.checkpoint.manager import CheckpointManager, restore, save  # noqa: F401
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager,
+    PartitionJournal,
+    restore,
+    save,
+)

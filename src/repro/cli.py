@@ -35,6 +35,19 @@ def _session_args(ap: argparse.ArgumentParser) -> None:
                          "streams designs that exceed it")
     ap.add_argument("--stream-dtype", default=None,
                     help='staged edge-stream dtype (e.g. "bfloat16")')
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="journal streamed partition results under this "
+                         "directory so a killed run can resume")
+    ap.add_argument("--resume", dest="resume", action="store_true",
+                    default=True,
+                    help="restore a prior partial run from --checkpoint-dir "
+                         "(default)")
+    ap.add_argument("--no-resume", dest="resume", action="store_false",
+                    help="ignore (wipe) any prior journal and run fresh")
+    ap.add_argument("--fault-plan", default=None,
+                    help="chaos testing: a repro.faults plan spec, e.g. "
+                         '"exec.launch:p=0.1,kind=transient,seed=7" '
+                         "(also honoured from $REPRO_FAULT_PLAN)")
 
 
 def _make_session(args):
@@ -51,6 +64,9 @@ def _make_session(args):
         memory_budget_bytes=budget,
         stream_dtype=args.stream_dtype,
         trace=bool(getattr(args, "trace", None)),
+        checkpoint_dir=getattr(args, "checkpoint_dir", None),
+        resume=getattr(args, "resume", True),
+        fault_plan=getattr(args, "fault_plan", None),
     ))
 
 

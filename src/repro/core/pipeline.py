@@ -97,6 +97,13 @@ class PipelineConfig:
     # the staged stream bytes; kernels accumulate f32).  None defers to
     # ``gnn.stream_dtype``.
     stream_dtype: Optional[str] = None
+    # crash-safe resume for streamed runs: when ``checkpoint_dir`` is set
+    # (and the design has a structural hash), every launched partition's
+    # core predictions are journaled atomically, and a re-run restores
+    # committed partitions instead of re-executing them.  ``resume=False``
+    # keeps journaling but ignores (wipes) any prior journal.
+    checkpoint_dir: Optional[str] = None
+    resume: bool = True
     # deprecated write-only alias of ``backend`` (the old spelling);
     # consumed and reset to None at construction so dataclasses.replace
     # with backend= never sees a stale conflicting alias
@@ -354,6 +361,26 @@ def _effective_stream_dtype(cfg: PipelineConfig) -> Optional[str]:
     return None if sdt in (None, "float32") else sdt
 
 
+def _journal_for(prep: PreparedDesign):
+    """Build the crash-resume journal for a streamed run, or None.
+
+    Journaling needs a durable identity for "the same work": the design's
+    structural hash (the service dedup key).  Only single-AIG runs have
+    one, so batched/LUT runs stream unjournaled.  ``resume=False`` wipes
+    any prior journal before the run — fresh execution, fresh journal.
+    """
+    cfg = prep.cfg
+    if not cfg.checkpoint_dir or cfg.batch != 1 or not isinstance(prep.design, A.AIG):
+        return None
+    from repro.checkpoint import PartitionJournal
+    from repro.io import aiger
+
+    journal = PartitionJournal(cfg.checkpoint_dir, aiger.structural_hash(prep.design))
+    if not cfg.resume:
+        journal.complete()  # discard any prior partial run
+    return journal
+
+
 def infer_streaming(
     params,
     prep: PreparedDesign,
@@ -361,6 +388,7 @@ def infer_streaming(
     backend: Optional[str] = None,
     executor=None,
     plan=None,
+    journal=None,
 ) -> tuple[np.ndarray, dict]:
     """Partitioned inference through the streaming executor.
 
@@ -368,6 +396,11 @@ def infer_streaming(
     executor probes (compiles, launches, bytes_h2d, pack/device/wall
     seconds) plus ``peak_packed_memory_bytes`` — the modeled device bytes
     of the largest packed launch — and ``chosen_k``.
+
+    ``journal``: explicit :class:`~repro.checkpoint.PartitionJournal`
+    override; when None one is derived from ``cfg.checkpoint_dir`` (keyed
+    by the design's structural hash) if configured — see
+    :func:`_journal_for`.
     """
     from repro.exec.plan import plan_from_subgraphs
     from repro.exec.stream import shared_executor
@@ -389,8 +422,10 @@ def infer_streaming(
             regrow=cfg.regrow, partitioner=cfg.partitioner, seed=cfg.seed,
             min_nodes=executor.min_nodes, min_edges=executor.min_edges,
         )
+    if journal is None:
+        journal = _journal_for(prep)
     before = dataclasses.replace(executor.stats)
-    pred = executor.run_plan(plan, prep.feats, gnn_cfg=cfg.gnn)
+    pred = executor.run_plan(plan, prep.feats, gnn_cfg=cfg.gnn, journal=journal)
     stats = dataclasses.asdict(executor.stats.delta(before))
     stats["peak_packed_memory_bytes"] = plan.peak_batch_memory_bytes(
         cfg.gnn, executor.capacity

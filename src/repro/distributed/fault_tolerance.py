@@ -15,6 +15,12 @@ topology is still healthy.
     relaunched job resumes at the last published step;
   * bounded retry of transient step failures (checkpoint-restore-replay).
 
+This module also owns the ONE retry/backoff policy of the repo:
+:func:`backoff_delays` (deterministic exponential backoff with seeded
+jitter) and :func:`is_transient` (is this failure worth retrying?).  The
+verification service's launch-retry path and :class:`ResilientLoop` both
+build on these — no layer keeps its own dormant duplicate.
+
 The elastic-topology path (restore onto a smaller mesh) is exercised in
 tests/test_distributed.py via reshard-on-restore.
 """
@@ -22,11 +28,91 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import random
 import time
 from pathlib import Path
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Iterator, Optional
 
 from repro.checkpoint.manager import CheckpointManager, latest_step, restore
+
+
+# ---------------------------------------------------------------------------
+# Retry/backoff policy (shared with repro.service)
+# ---------------------------------------------------------------------------
+
+def backoff_delays(
+    retries: int,
+    *,
+    base_s: float = 0.05,
+    factor: float = 2.0,
+    jitter: float = 0.5,
+    max_s: float = 5.0,
+    seed: object = 0,
+) -> Iterator[float]:
+    """``retries`` exponential backoff delays with deterministic jitter.
+
+    Delay *i* is ``min(max_s, base_s * factor**i) * (1 + jitter * u_i)``
+    with ``u_i`` drawn from a ``random.Random`` seeded from ``seed``
+    (string-seeded, so the same (seed, attempt) always jitters the same —
+    chaos runs replay bit-identically).  Jitter de-synchronises retry
+    herds; determinism keeps them testable.
+    """
+    rng = random.Random(f"backoff:{seed}")
+    for attempt in range(max(0, retries)):
+        yield min(max_s, base_s * factor ** attempt) * (1.0 + jitter * rng.random())
+
+
+def is_transient(exc: BaseException) -> bool:
+    """Is this failure plausibly cleared by a retry?
+
+    Injected :class:`repro.faults.TransientFault` (and anything whose
+    class name says Transient), connection/timeout errors, and XLA's
+    retryable status codes qualify.  Injected ``FatalFault`` — and any
+    ordinary logic error — does not: retrying a poisoned design only
+    burns device time.
+    """
+    from repro import faults
+
+    if isinstance(exc, faults.FatalFault):
+        return False
+    if isinstance(exc, (faults.TransientFault, ConnectionError, TimeoutError)):
+        return True
+    if "Transient" in type(exc).__name__:
+        return True
+    msg = str(exc)
+    return any(code in msg for code in ("UNAVAILABLE", "ABORTED", "DEADLINE_EXCEEDED"))
+
+
+def retry_call(
+    fn: Callable[[], Any],
+    *,
+    retries: int,
+    seed: object = 0,
+    base_s: float = 0.05,
+    should_retry: Callable[[BaseException], bool] = is_transient,
+    on_retry: Optional[Callable[[int, BaseException], None]] = None,
+    sleep: Callable[[float], None] = time.sleep,
+):
+    """Call ``fn`` with up to ``retries`` backoff-spaced replays.
+
+    Only failures ``should_retry`` accepts are replayed; ``on_retry``
+    (attempt index, exception) runs before each sleep — the service uses
+    it to bump its retry counter and re-check ticket deadlines (raising
+    from ``on_retry`` aborts the retry loop with that error).
+    """
+    delays = backoff_delays(retries, base_s=base_s, seed=seed)
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except Exception as e:  # noqa: BLE001 — classified below
+            delay = next(delays, None)
+            if delay is None or not should_retry(e):
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            sleep(delay)
+            attempt += 1
 
 
 @dataclasses.dataclass
@@ -102,18 +188,32 @@ class ResilientLoop:
         self.ckpt.wait()
 
     def _one_step(self, batch):
-        for attempt in range(self.max_retries + 1):
-            t0 = time.perf_counter()
-            try:
-                self.state, metrics = self.step_fn(self.state, batch)
-                break
-            except Exception:  # noqa: BLE001 transient failure -> replay
-                if attempt == self.max_retries:
-                    raise
-                if latest_step(self.ckpt.directory) is not None:
-                    self.state, _ = restore(
-                        self.state, self.ckpt.directory, shardings=self.shardings
-                    )
+        t0 = time.perf_counter()
+
+        def _attempt():
+            nonlocal t0
+            t0 = time.perf_counter()   # straggler timing covers the attempt
+            self.state, metrics = self.step_fn(self.state, batch)
+            return metrics
+
+        def _restore_before_retry(attempt, exc):
+            # replay from the last published checkpoint, like a relaunch
+            if latest_step(self.ckpt.directory) is not None:
+                self.state, _ = restore(
+                    self.state, self.ckpt.directory, shardings=self.shardings
+                )
+
+        # every step failure is treated as a preemption and replayed (the
+        # training loop's contract predates fault classification); the
+        # service layer passes the stricter ``is_transient`` instead
+        metrics = retry_call(
+            _attempt,
+            retries=self.max_retries,
+            seed=self.step,
+            base_s=0.01,
+            should_retry=lambda e: True,
+            on_retry=_restore_before_retry,
+        )
         dt = time.perf_counter() - t0
         ewma = dt if self.ewma is None else 0.9 * self.ewma + 0.1 * dt
         if self.ewma is not None and dt > self.straggler_factor * self.ewma:

@@ -35,6 +35,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro import faults
 from repro.core.graph import EdgeGraph
 from repro.core.regrowth import Subgraph
 from repro.exec.packing import PackedBatch, pack_partitions, scatter_core_predictions
@@ -58,6 +59,11 @@ class StreamStats:
     device_s: float = 0.0         # device execution + readback time
     wall_s: float = 0.0           # end-to-end streamed time
     max_queue_depth: int = 0      # prefetch occupancy high-water mark
+    # failure-domain counters: launches replayed at reduced pack capacity
+    # after a device resource error, and partitions skipped on a resumed
+    # run because a journal already held their core predictions
+    capacity_halvings: int = 0
+    resumed_partitions: int = 0
     # model-vs-actual memory accounting (high-water marks): what the plan
     # modeled as the packed-launch peak vs the model evaluated on the
     # REAL launched padded shapes — the validation loop for choose_k
@@ -84,6 +90,8 @@ class StreamStats:
             pack_s=self.pack_s - before.pack_s,
             device_s=self.device_s - before.device_s,
             wall_s=self.wall_s - before.wall_s,
+            capacity_halvings=self.capacity_halvings - before.capacity_halvings,
+            resumed_partitions=self.resumed_partitions - before.resumed_partitions,
             max_queue_depth=self.max_queue_depth,
             modeled_peak_bytes=self.modeled_peak_bytes,
             actual_peak_bytes=self.actual_peak_bytes,
@@ -145,7 +153,7 @@ class StreamingExecutor:
     # -- execution ----------------------------------------------------------
 
     def run_plan(self, plan: PartitionPlan, features: np.ndarray,
-                 gnn_cfg=None) -> np.ndarray:
+                 gnn_cfg=None, journal=None) -> np.ndarray:
         """Stream every partition batch; returns (num_nodes,) int32 global
         predictions with every core row written (halo rows are computed
         under their owning partition).
@@ -154,6 +162,12 @@ class StreamingExecutor:
         modeled packed-launch peak and the same analytic model evaluated
         on every REAL launched padded shape land in ``stats`` and the
         ``exec.modeled_peak_bytes`` / ``exec.actual_peak_bytes`` gauges.
+
+        ``journal`` (a :class:`repro.checkpoint.PartitionJournal`) makes
+        the run crash-safe: each launched partition's core predictions are
+        committed as they land, previously committed partitions are
+        restored into ``out`` and dropped from the schedule, and the
+        journal is cleared once every partition has been written.
         """
         t_wall = time.perf_counter()
         schedule = plan.schedule(self.capacity)
@@ -165,8 +179,23 @@ class StreamingExecutor:
             )
             REGISTRY.gauge("exec.modeled_peak_bytes").set(modeled)
         out = np.zeros(plan.num_nodes, dtype=np.int32)
+        if journal is not None:
+            restored = journal.restore(plan, out)
+            if restored:
+                schedule = [
+                    (shape, kept)
+                    for shape, indices in schedule
+                    if (kept := [i for i in indices if i not in restored])
+                ]
+                self.stats.resumed_partitions += len(restored)
+                REGISTRY.counter("exec.resumed_partitions").inc(len(restored))
         compiles_before = self.runner.compile_count
         tracer = current_tracer()
+        # per-run degradation state: a device resource error halves the
+        # effective pack capacity for the REST of this run (mutated by
+        # _launch_degradable), so one undersized device doesn't turn every
+        # remaining batch into its own failure
+        degrade = {"cap": self.capacity}
 
         with tracer.span(
             "exec.stream",
@@ -177,7 +206,9 @@ class StreamingExecutor:
                 # synchronous fallback (also the degenerate 0/1-batch case)
                 for shape, indices in schedule:
                     batch = self._pack_timed(plan, indices, features, shape)
-                    self._launch(batch, out, gnn_cfg)
+                    self._launch_degradable(
+                        plan, batch, out, features, gnn_cfg, degrade, journal
+                    )
             else:
                 q: queue.Queue = queue.Queue(maxsize=self.prefetch)
                 stop = threading.Event()  # consumer died: unblock producer
@@ -198,11 +229,19 @@ class StreamingExecutor:
                     with tracer.adopt(stream_id):
                         try:
                             for shape, indices in schedule:
+                                faults.fire(
+                                    "exec.prefetch",
+                                    tag=lambda: f"parts={len(indices)}",
+                                )
                                 if not _put(
                                     self._pack_timed(plan, indices, features, shape)
                                 ):
                                     return
                             _put(_SENTINEL)
+                        except faults.WorkerKilled:
+                            # simulated abrupt thread death: deliver NOTHING
+                            # — the consumer-side watchdog must catch this
+                            return
                         except BaseException as e:  # noqa: BLE001 — forwarded to consumer
                             _put(e)
 
@@ -217,18 +256,23 @@ class StreamingExecutor:
                             self.stats.max_queue_depth, depth
                         )
                         REGISTRY.gauge("exec.queue_depth").set(depth)
-                        got = q.get()
+                        got = self._next_batch(q, th)
                         if got is _SENTINEL:
                             break
                         if isinstance(got, BaseException):
                             raise got
-                        self._launch(got, out, gnn_cfg)
+                        self._launch_degradable(
+                            plan, got, out, features, gnn_cfg, degrade, journal
+                        )
                 finally:
                     # a launch failure leaves the producer blocked mid-put;
                     # the stop flag makes its bounded put give up promptly
                     # instead of stalling join for its full timeout
                     stop.set()
                     th.join(timeout=60.0)
+
+        if journal is not None:
+            journal.complete()
 
         self.stats.runs += 1
         # delta, not the runner's cumulative count: a runner shared with
@@ -277,10 +321,33 @@ class StreamingExecutor:
 
     # -- internals ----------------------------------------------------------
 
-    def _pack_timed(self, plan, indices, features, shape) -> PackedBatch:
+    @staticmethod
+    def _next_batch(q: queue.Queue, th: threading.Thread):
+        """Bounded-wait queue read with a producer watchdog.
+
+        A blocking ``q.get()`` turns a dead prefetch thread into a silent
+        hang: nothing will ever arrive, and nothing ever raises.  Poll
+        instead, and if the producer has died without delivering either a
+        batch or a forwarded exception, fail the run loudly.
+        """
+        while True:
+            try:
+                return q.get(timeout=0.2)
+            except queue.Empty:
+                if not th.is_alive():
+                    REGISTRY.counter("exec.prefetch_deaths").inc()
+                    raise RuntimeError(
+                        "prefetch thread died without delivering a batch "
+                        "or an error (see exec.prefetch_deaths)"
+                    ) from None
+
+    def _pack_timed(self, plan, indices, features, shape,
+                    capacity: Optional[int] = None) -> PackedBatch:
         t0 = time.perf_counter()
         with span("exec.pack", parts=len(indices)) as sp:
-            batch = pack_partitions(plan, indices, features, shape, self.capacity)
+            batch = pack_partitions(
+                plan, indices, features, shape, capacity or self.capacity
+            )
             sp.set(bytes=batch.nbytes)
         dt = time.perf_counter() - t0
         self.stats.pack_s += dt
@@ -289,8 +356,55 @@ class StreamingExecutor:
         REGISTRY.histogram("exec.pack_s").observe(dt)
         return batch
 
+    def _launch_degradable(self, plan, batch: PackedBatch, out: np.ndarray,
+                           features, gnn_cfg, degrade: dict,
+                           journal=None) -> None:
+        """Launch with graceful capacity degradation.
+
+        On a device resource error (OOM and friends, classified by
+        :func:`repro.faults.is_resource_error`) the effective pack
+        capacity for the rest of the run is halved and the failed batch
+        is re-packed as smaller chunks and relaunched — smaller padded
+        arrays, a smaller jit signature, a smaller device footprint.  A
+        singleton batch that still hits a resource error cannot shrink
+        further, so it propagates.
+        """
+        cap = max(1, degrade["cap"])
+        if len(batch.indices) > cap:
+            # capacity already degraded earlier in the run: proactively
+            # split batches packed (e.g. by the prefetch thread) at the
+            # old capacity instead of rediscovering the OOM per batch
+            self._relaunch_split(
+                plan, batch, out, features, gnn_cfg, degrade, journal, cap
+            )
+            return
+        try:
+            self._launch(batch, out, gnn_cfg, journal)
+        except Exception as e:
+            if not faults.is_resource_error(e) or len(batch.indices) <= 1:
+                raise
+            degrade["cap"] = cap = max(1, min(cap, len(batch.indices)) // 2)
+            self.stats.capacity_halvings += 1
+            REGISTRY.counter("exec.capacity_halvings").inc()
+            REGISTRY.gauge("exec.effective_capacity").set(cap)
+            self._relaunch_split(
+                plan, batch, out, features, gnn_cfg, degrade, journal, cap
+            )
+
+    def _relaunch_split(self, plan, batch, out, features, gnn_cfg,
+                        degrade, journal, cap: int) -> None:
+        indices = list(batch.indices)
+        for at in range(0, len(indices), cap):
+            chunk = indices[at:at + cap]
+            repacked = self._pack_timed(
+                plan, chunk, features, batch.shape, capacity=cap
+            )
+            self._launch_degradable(
+                plan, repacked, out, features, gnn_cfg, degrade, journal
+            )
+
     def _launch(self, batch: PackedBatch, out: np.ndarray,
-                gnn_cfg=None) -> None:
+                gnn_cfg=None, journal=None) -> None:
         if gnn_cfg is not None:
             # the same analytic model, evaluated on the padded shapes this
             # launch ACTUALLY ships (capacity*n_pad rows, capacity*e_pad
@@ -308,6 +422,10 @@ class StreamingExecutor:
             REGISTRY.gauge("exec.actual_peak_bytes").set(actual)
         t0 = time.perf_counter()
         with span("exec.launch", parts=len(batch.items)):
+            faults.fire(
+                "exec.launch",
+                tag=lambda: f"parts={len(batch.items)} shape={batch.shape}",
+            )
             pred = self.runner(batch.arrays)
         dt = time.perf_counter() - t0
         self.stats.device_s += dt
@@ -317,6 +435,13 @@ class StreamingExecutor:
         self.stats.core_rows += scatter_core_predictions(out, batch, pred)
         REGISTRY.counter("exec.launches").inc()
         REGISTRY.histogram("exec.device_s").observe(dt)
+        if journal is not None:
+            # commit core predictions partition-by-partition AFTER the
+            # scatter: each journal file is written atomically, so a crash
+            # between launches loses at most the in-flight batch
+            for idx, it in zip(batch.indices, batch.items):
+                ids = it.global_ids[: it.num_core]
+                journal.commit(int(idx), ids, out[ids])
 
 
 #: small identity-keyed executor reuse pool: a fresh executor per call

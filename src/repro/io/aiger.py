@@ -35,14 +35,34 @@ from typing import Optional, Union
 
 import numpy as np
 
+from repro import faults
 from repro.core import aig as A
 from repro.obs import REGISTRY, span
 
-__all__ = ["dump", "dumps", "load", "loads", "structural_hash", "AigerError"]
+__all__ = [
+    "dump", "dumps", "load", "loads", "structural_hash",
+    "AigerError", "AigerParseError",
+]
 
 
 class AigerError(ValueError):
     """Malformed or unsupported AIGER input."""
+
+
+class AigerParseError(AigerError):
+    """Malformed AIGER *content*, attributed to a byte offset when known.
+
+    The service parses untrusted bytes on its prepare pool; a corrupt
+    upload must come back as one typed, offset-attributed per-ticket
+    error — never as a bare ``ValueError`` (or worse, an unbounded
+    allocation) escaping from whatever line happened to choke first.
+    """
+
+    def __init__(self, message: str, *, offset: Optional[int] = None):
+        if offset is not None:
+            message = f"{message} (at byte {offset})"
+        super().__init__(message)
+        self.offset = offset
 
 
 # ---------------------------------------------------------------------------
@@ -135,23 +155,46 @@ def dump(aig: A.AIG, path, *, binary: bool = True, comments: bool = True) -> Non
 # ---------------------------------------------------------------------------
 
 def _read_line(f: io.BytesIO) -> bytes:
+    at = f.tell()
     line = f.readline()
     if not line:
-        raise AigerError("unexpected end of AIGER data")
+        raise AigerParseError("unexpected end of AIGER data", offset=at)
     return line.rstrip(b"\n")
+
+
+def _read_uint(f: io.BytesIO, what: str) -> int:
+    """One non-negative decimal line (output/input literal sections)."""
+    at = f.tell()
+    line = _read_line(f)
+    try:
+        value = int(line)
+    except ValueError:
+        raise AigerParseError(
+            f"bad {what} line {line!r}", offset=at
+        ) from None
+    if value < 0:
+        raise AigerParseError(f"negative {what} {value}", offset=at)
+    return value
 
 
 def _decode_leb(f: io.BytesIO) -> int:
     value, shift = 0, 0
     while True:
+        at = f.tell()
         byte = f.read(1)
         if not byte:
-            raise AigerError("truncated binary AND section")
+            raise AigerParseError("truncated binary AND section", offset=at)
         b = byte[0]
         value |= (b & 0x7F) << shift
         if not b & 0x80:
             return value
         shift += 7
+        if shift > 63:
+            # a literal needing >63 bits is corruption, not a big design —
+            # bail before the int (and the arrays sized from it) balloon
+            raise AigerParseError(
+                "LEB128 delta exceeds 64 bits", offset=at
+            )
 
 
 def _topo_sort_ands(defs: dict[int, tuple[int, int]], n_in: int) -> list[int]:
@@ -222,6 +265,7 @@ def peek_name(data: bytes) -> Optional[str]:
 def loads(data: bytes, *, name: str = "aiger") -> A.AIG:
     """Parse AIGER bytes (either format) into an :class:`AIG`."""
     with span("io.aiger.loads", bytes=len(data)) as sp:
+        faults.fire("io.parse", tag=lambda: peek_name(data) or name)
         aig = _loads(data, name=name)
         sp.set(nodes=aig.num_nodes)
     REGISTRY.counter("io.aiger.parses").inc()
@@ -233,41 +277,62 @@ def _loads(data: bytes, *, name: str) -> A.AIG:
     f = io.BytesIO(data)
     header = _read_line(f).split()
     if len(header) < 6 or header[0] not in (b"aig", b"aag"):
-        raise AigerError("not an AIGER file (want 'aig'/'aag M I L O A' header)")
+        raise AigerParseError(
+            "not an AIGER file (want 'aig'/'aag M I L O A' header)", offset=0
+        )
     binary = header[0] == b"aig"
     try:
         m, n_in, n_latch, n_out, n_and = (int(x) for x in header[1:6])
     except ValueError as e:
-        raise AigerError(f"bad header {header!r}") from e
+        raise AigerParseError(f"bad header {header!r}", offset=0) from e
+    if min(m, n_in, n_latch, n_out, n_and) < 0:
+        raise AigerParseError(f"negative header count in {header!r}", offset=0)
     if n_latch:
         raise AigerError("latches are not supported (combinational AIGs only)")
     if m != n_in + n_and:
-        raise AigerError(f"header M={m} != I+A={n_in + n_and}")
+        raise AigerParseError(f"header M={m} != I+A={n_in + n_and}", offset=0)
+    # every declared object costs bytes downstream (≥2 for an AND or an
+    # output line) — counts past the file size are corruption, and must
+    # be rejected BEFORE they size any allocation
+    if max(n_in, n_out, n_and) > len(data):
+        raise AigerParseError(
+            f"header counts {header!r} exceed file size {len(data)}", offset=0
+        )
 
     if binary:
-        out_lits = [int(_read_line(f)) for _ in range(n_out)]
+        out_lits = [_read_uint(f, "output literal") for _ in range(n_out)]
         and_order = list(range(n_in + 1, n_in + n_and + 1))
         defs: dict[int, tuple[int, int]] = {}
         for i, v in enumerate(and_order):
             lhs = 2 * v
+            at = f.tell()
             d0 = _decode_leb(f)
             d1 = _decode_leb(f)
             rhs0 = lhs - d0
             rhs1 = rhs0 - d1
             if rhs1 < 0 or rhs0 >= lhs:
-                raise AigerError(f"bad delta encoding for AND {v}")
+                raise AigerParseError(
+                    f"bad delta encoding for AND {v}", offset=at
+                )
             defs[v] = (rhs0, rhs1)
     else:
-        in_lits = [int(_read_line(f)) for _ in range(n_in)]
+        in_lits = [_read_uint(f, "input literal") for _ in range(n_in)]
         for i, lit in enumerate(in_lits):
             if lit != 2 * (i + 1):
                 raise AigerError("non-contiguous ASCII input literals unsupported")
-        out_lits = [int(_read_line(f)) for _ in range(n_out)]
+        out_lits = [_read_uint(f, "output literal") for _ in range(n_out)]
         defs = {}
         for _ in range(n_and):
-            lhs, r0, r1 = (int(x) for x in _read_line(f).split())
+            at = f.tell()
+            fields = _read_line(f).split()
+            try:
+                lhs, r0, r1 = (int(x) for x in fields)
+            except ValueError:
+                raise AigerParseError(
+                    f"bad AND line {fields!r} (want 'lhs rhs0 rhs1')", offset=at
+                ) from None
             if lhs & 1 or not (n_in + 1 <= lhs >> 1 <= m):
-                raise AigerError(f"bad AND lhs literal {lhs}")
+                raise AigerParseError(f"bad AND lhs literal {lhs}", offset=at)
             defs[lhs >> 1] = (r0, r1)
         if len(defs) != n_and:
             raise AigerError("duplicate AND definitions")
@@ -308,7 +373,7 @@ def _loads(data: bytes, *, name: str) -> A.AIG:
     if len(label) == num_nodes:
         labels = np.frombuffer(label.encode(), dtype=np.uint8).astype(np.int8)
         labels -= ord("0")
-        if labels.min() < 0 or labels.max() >= A.NUM_CLASSES:
+        if labels.size and (labels.min() < 0 or labels.max() >= A.NUM_CLASSES):
             raise AigerError("corrupt groot-labels comment")
     else:
         from repro.core.labels import structural_detect

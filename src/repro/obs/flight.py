@@ -65,6 +65,10 @@ class FlightRecord:
     marks: tuple = ()                 # ((stage, perf_counter), ...) ordered
     stages: dict = dataclasses.field(default_factory=dict)
     total_s: float = 0.0
+    # failure-domain facts: transient-launch replays this ticket consumed
+    # and the wall-clock budget it was armed with (None = no deadline)
+    retries: int = 0
+    deadline_s: Optional[float] = None
 
     @property
     def ok(self) -> bool:

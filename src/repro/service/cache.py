@@ -14,6 +14,8 @@ import threading
 from collections import OrderedDict
 from typing import Hashable, Optional
 
+from repro import faults
+
 
 @dataclasses.dataclass
 class CacheStats:
@@ -40,6 +42,7 @@ class ResultCache:
         return (design_hash, config_key)
 
     def get(self, key: Hashable) -> Optional[object]:
+        faults.fire("cache.load")
         with self._lock:
             if key in self._data:
                 self._data.move_to_end(key)

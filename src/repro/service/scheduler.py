@@ -221,6 +221,27 @@ class SlotPool:
         self._size -= len(out)
         return out
 
+    def prune(self, dead) -> int:
+        """Drop every payload ``dead(payload)`` accepts; returns the count.
+
+        The device loop prunes slots of failed / deadline-expired requests
+        each cycle, so their pool occupancy is released immediately rather
+        than riding along until their bucket next drains — part of the
+        "every failure path releases its resources" contract.
+        """
+        dropped = 0
+        for shape in list(self._heaps):
+            heap = self._heaps[shape]
+            keep = [entry for entry in heap if not dead(entry[2])]
+            dropped += len(heap) - len(keep)
+            if not keep:
+                self._heaps.pop(shape)
+            elif len(keep) != len(heap):
+                heapq.heapify(keep)
+                self._heaps[shape] = keep
+        self._size -= dropped
+        return dropped
+
 
 class ShapeBucketScheduler:
     """Groups work items into shape buckets and runs them batched.

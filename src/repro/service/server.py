@@ -38,6 +38,25 @@ Latency/robustness features layered on the loop:
 
 Cache hits skip partitioning, inference, and verification entirely.
 
+Failure-domain hardening (see README "Failure semantics"):
+
+  * **deadlines**: ``submit(deadline_s=...)`` (or the config default)
+    arms a per-ticket budget checked cooperatively at every stage
+    boundary — an expired ticket fails with :class:`DeadlineExceeded`
+    (flight-recorded, ``service.deadline_exceeded``) and ``poll()`` /
+    ``result()`` themselves expire overdue tickets, so a wedged worker
+    can never hang a caller past its deadline;
+  * **retries**: a transient launch failure of a lone item replays with
+    exponential backoff + seeded jitter (the shared policy in
+    ``repro.distributed.fault_tolerance``; ``service.retries``);
+  * **bisection**: a failed multi-item pack is split and re-run in
+    halves (``service.bisections``) so one poisoned design fails alone
+    while its co-batched tickets complete;
+  * **worker-death detection**: ``poll()``/``result()`` notice a dead
+    device thread and fail the affected tickets instead of blocking
+    forever; every failure path releases tenant in-flight counts and
+    slot-pool occupancy.
+
 CLI (the ``repro`` console entry point; ``python -m repro.service.server``
 still works)::
 
@@ -63,10 +82,12 @@ from typing import Optional
 
 import numpy as np
 
+from repro import faults
 from repro.core import aig as A
 from repro.core import gnn
 from repro.core import pipeline as P
 from repro.core.verify import VerifyResult
+from repro.distributed.fault_tolerance import retry_call
 from repro.io import aiger
 from repro.obs import FlightRecorder, MetricsRegistry, record_from_marks, span
 from repro.obs.flight import failed_stage_from_marks, failure_dump_dir
@@ -77,6 +98,16 @@ from repro.service.scheduler import ShapeBucketScheduler, SlotPool
 
 class AdmissionError(RuntimeError):
     """Raised by ``submit()`` when a tenant is at its in-flight cap."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A ticket ran past its ``deadline_s`` budget.
+
+    Raised *as the ticket's failure cause* (``result.error``), never out
+    of ``poll()``/``result()`` themselves: expiry is cooperative — the
+    stage boundaries and the retrieval API both check the clock, fail the
+    ticket, release its tenant/pool resources, and record a flight.
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +152,14 @@ class ServiceConfig:
     # to flight_dump_dir (or $REPRO_FLIGHT_DUMP_DIR) at failure time
     flight_records: int = 256
     flight_dump_dir: Optional[str] = None
+    # failure domain (README "Failure semantics").  deadline_s arms every
+    # ticket with a wall-clock budget (None = no deadline; a per-submit
+    # deadline_s overrides).  launch_retries bounds transient-failure
+    # replays of a lone item; retry_backoff_s seeds the exponential
+    # backoff.  None of these changes results, so none is cache-keyed.
+    deadline_s: Optional[float] = None
+    launch_retries: int = 2
+    retry_backoff_s: float = 0.05
 
     def cache_key_part(self) -> tuple:
         return (
@@ -166,6 +205,11 @@ class _Request:
     bucket_capacity: Optional[int] = None
     streamed: bool = False
     coalesced: bool = False
+    # failure-domain state
+    deadline_s: Optional[float] = None   # the armed budget (for the record)
+    deadline: Optional[float] = None     # absolute perf_counter expiry
+    retries: int = 0                     # transient-launch replays consumed
+    claimed: bool = False                # first-result-wins guard (_finish)
 
 
 @dataclasses.dataclass
@@ -329,6 +373,7 @@ class VerificationService:
         signed: Optional[bool] = None,
         priority: int = 1,
         tenant: Optional[str] = None,
+        deadline_s: Optional[float] = None,
     ) -> int:
         """Enqueue one verification request; returns a ticket id.
 
@@ -336,6 +381,9 @@ class VerificationService:
         express lane).  ``tenant`` attributes the request for admission
         control: past ``max_inflight_per_tenant`` unfinished requests a
         tenant gets :class:`AdmissionError` instead of queueing.
+        ``deadline_s`` arms a wall-clock budget (default:
+        ``config.deadline_s``); past it the ticket fails with
+        :class:`DeadlineExceeded` instead of waiting further.
         """
         if self._stop:
             raise RuntimeError("service is closed")
@@ -363,6 +411,10 @@ class VerificationService:
                 priority=priority,
                 tenant=tenant,
             )
+            budget = deadline_s if deadline_s is not None else self.config.deadline_s
+            if budget is not None:
+                req.deadline_s = budget
+                req.deadline = req.t_submit + budget
             req.marks.append(("submit", req.t_submit))
             self._requests[rid] = req
             if tenant is not None:
@@ -370,7 +422,14 @@ class VerificationService:
                     self._tenant_inflight.get(tenant, 0) + 1
                 )
         self.metrics.counter("service.admitted").inc()
-        if not self._fast_admit(req):
+        try:
+            fast = self._fast_admit(req)
+        except Exception as e:  # noqa: BLE001 — submit-side failures (e.g. an
+            # injected cache.load fault) become per-ticket errors, releasing
+            # the tenant slot, instead of leaking out of submit()
+            self._fail(req, e)
+            return rid
+        if not fast:
             self._pool.submit(self._prepare_one, req)
         return rid
 
@@ -429,20 +488,70 @@ class VerificationService:
 
     # -- retrieval API -------------------------------------------------------
 
+    def _worker_died(self) -> bool:
+        """True when the device thread is gone without a clean shutdown."""
+        return not self._stop and not self._device_thread.is_alive()
+
+    def _expire_if_due(self, req: _Request) -> bool:
+        """Cooperative deadline check: fail an overdue unfinished ticket
+        (flight-recorded, tenant/pool resources released) and return True.
+        Called at every stage boundary AND from poll()/result(), so an
+        expired ticket is observed as failed no matter where it wedged."""
+        if req.deadline is None or req.event.is_set():
+            return False
+        if time.perf_counter() < req.deadline:
+            return False
+        self.metrics.counter("service.deadline_exceeded").inc()
+        self._fail(req, DeadlineExceeded(
+            f"ticket {req.req_id} exceeded its {req.deadline_s:.4g}s deadline"
+        ))
+        return True
+
+    def _fail_if_worker_dead(self, req: _Request) -> bool:
+        if req.event.is_set() or not self._worker_died():
+            return False
+        self._fail(req, RuntimeError(
+            "service device worker died; ticket can never finish"
+        ))
+        return True
+
     def poll(self, ticket: int) -> Optional[ServiceResult]:
-        """Non-blocking: the result if finished, else None."""
+        """Non-blocking: the result if finished, else None.
+
+        Never returns None forever for a doomed ticket: an expired
+        deadline or a dead device worker fails the ticket right here, so
+        the caller sees an errored result on its next poll.
+        """
         req = self._requests.get(ticket)
         if req is None:
             raise KeyError(f"unknown ticket {ticket}")
+        if not req.event.is_set():
+            self._expire_if_due(req)
+            self._fail_if_worker_dead(req)
         return req.result if req.event.is_set() else None
 
     def result(self, ticket: int, timeout: Optional[float] = None) -> ServiceResult:
-        """Blocking retrieval."""
+        """Blocking retrieval, bounded by ``timeout`` and the ticket's
+        deadline.  Raises :class:`TimeoutError` past ``timeout``; a dead
+        device worker or an expired deadline fails the ticket (errored
+        result) instead of blocking forever."""
         req = self._requests.get(ticket)
         if req is None:
             raise KeyError(f"unknown ticket {ticket}")
-        if not req.event.wait(timeout):
-            raise TimeoutError(f"ticket {ticket} not done within {timeout}s")
+        end = None if timeout is None else time.perf_counter() + timeout
+        while not req.event.is_set():
+            wait = 0.1
+            now = time.perf_counter()
+            if req.deadline is not None:
+                wait = min(wait, max(req.deadline - now, 0.0) + 0.005)
+            if end is not None:
+                wait = min(wait, max(end - now, 0.0))
+            if req.event.wait(max(wait, 0.005)):
+                break
+            if self._expire_if_due(req) or self._fail_if_worker_dead(req):
+                break
+            if end is not None and time.perf_counter() >= end:
+                raise TimeoutError(f"ticket {ticket} not done within {timeout}s")
         assert req.result is not None
         return req.result
 
@@ -527,6 +636,8 @@ class VerificationService:
             capacity=req.bucket_capacity,
             streamed=req.streamed,
             error=result.error,
+            retries=req.retries,
+            deadline_s=req.deadline_s,
         )
         self.flights.record(rec)
         if not rec.ok:
@@ -535,16 +646,24 @@ class VerificationService:
                 self.flights.dump_failure(rec, directory)
 
     def _finish(self, req: _Request, result: ServiceResult) -> None:
-        first = not req.event.is_set()
-        if first:
-            self._record_flight(req, result)
+        # first-result-wins: a ticket can be finished concurrently from
+        # several failure paths (deadline expiry in a poll()ing thread vs
+        # the device loop completing it) — the claim below makes exactly
+        # one of them the ticket's outcome; later finishes are no-ops, so
+        # a DeadlineExceeded can never be overwritten by a late success
+        with self._lock:
+            first = not req.claimed
+            req.claimed = True
+        if not first:
+            return          # the claiming path owns result + event
+        self._record_flight(req, result)
         req.result = result
         req.event.set()
         # bound the ticket table: a long-lived service must not retain one
         # _Request (+ result payload) per request forever.  Oldest finished
         # tickets stop being pollable past max_done_retained.
         with self._lock:
-            if first and req.tenant is not None:
+            if req.tenant is not None:
                 n = self._tenant_inflight.get(req.tenant, 1) - 1
                 if n <= 0:
                     self._tenant_inflight.pop(req.tenant, None)
@@ -590,6 +709,9 @@ class VerificationService:
 
     def _prepare_one(self, req: _Request) -> None:
         try:
+            if self._expire_if_due(req):
+                return
+            faults.fire("service.prepare", tag=lambda: self._req_name(req))
             t0 = time.perf_counter()
             design = req.design
             if design is None and req.aiger_bytes is not None:
@@ -735,7 +857,133 @@ class VerificationService:
             inf.failed = True
             self._fail(inf.req, exc)
 
+    def _with_retries(self, attempt, req: _Request):
+        """Run one device attempt with the shared transient-retry policy:
+        exponential backoff + seeded jitter, bounded by ``launch_retries``
+        AND the ticket's deadline (an expired budget aborts the replay
+        loop with :class:`DeadlineExceeded`)."""
+        def on_retry(i, exc):
+            if req.deadline is not None and time.perf_counter() >= req.deadline:
+                self.metrics.counter("service.deadline_exceeded").inc()
+                raise DeadlineExceeded(
+                    f"ticket {req.req_id} exceeded its {req.deadline_s:.4g}s "
+                    f"deadline while retrying: {exc}"
+                ) from exc
+            req.retries += 1
+            self.metrics.counter("service.retries").inc()
+
+        return retry_call(
+            attempt,
+            retries=self.config.launch_retries,
+            seed=req.req_id,
+            base_s=self.config.retry_backoff_s,
+            on_retry=on_retry,
+        )
+
+    def _run_streamed_slot(self, slot: _Slot) -> None:
+        """One oversized item: partitioned + streamed through the shared
+        runner (one whole-item unit; its sub-launches batch internally at
+        stream_capacity).  Transient failures retry like packed items."""
+        inf = slot.inflight
+        req = inf.req
+        t0 = time.perf_counter()
+        self.metrics.histogram("service.admission_s").observe(t0 - inf.t_enq)
+        req.streamed = True
+        self._mark(req, "admitted")
+
+        def _attempt():
+            faults.fire("service.device", tag=lambda: self._req_name(req))
+            return self.scheduler.run_one(slot.item)
+
+        try:
+            preds = self._with_retries(_attempt, req)
+            t_inf = time.perf_counter() - t0
+            self.metrics.histogram("service.infer_s").observe(t_inf)
+            self._scatter(slot, preds[(req.req_id, slot.item.part_index)], t_inf)
+        except Exception as e:  # noqa: BLE001
+            self._fail_inflight(inf, e)
+
+    def _run_pack_slots(self, slots: list, shape, depth: int = 0) -> None:
+        """One device call over ≤capacity live same-bucket slots, with
+        blast-radius isolation: a failing multi-slot pack is bisected and
+        each half re-run (``service.bisections``), so a poisoned item
+        ultimately fails *alone* while its co-batched tickets complete; a
+        lone item's transient failure replays with backoff
+        (``service.retries``)."""
+        live = []
+        for s in slots:
+            inf = s.inflight
+            if inf.failed or inf.req.event.is_set():
+                continue
+            if self._expire_if_due(inf.req):
+                inf.failed = True
+                continue
+            live.append(s)
+        slots = live
+        if not slots:
+            return
+        t0 = time.perf_counter()
+        for s in slots:
+            if depth == 0:
+                self.metrics.histogram("service.admission_s").observe(
+                    t0 - s.inflight.t_enq
+                )
+            if s.inflight.req.bucket is None:
+                s.inflight.req.bucket = (shape.n_pad, shape.e_pad)
+                s.inflight.req.bucket_capacity = self.scheduler.capacity
+            self._mark(s.inflight.req, "admitted")
+
+        def _attempt():
+            faults.fire(
+                "service.device",
+                tag=lambda: ",".join(
+                    self._req_name(s.inflight.req) for s in slots
+                ),
+            )
+            return self.scheduler.run_pack([s.item for s in slots], shape)
+
+        try:
+            if len(slots) == 1:
+                preds = self._with_retries(_attempt, slots[0].inflight.req)
+            else:
+                preds = _attempt()
+        except Exception as e:  # noqa: BLE001
+            if len(slots) > 1:
+                self.metrics.counter("service.bisections").inc()
+                mid = (len(slots) + 1) // 2
+                self._run_pack_slots(slots[:mid], shape, depth + 1)
+                self._run_pack_slots(slots[mid:], shape, depth + 1)
+                return
+            self._fail_inflight(slots[0].inflight, e)
+            return
+        t_inf = time.perf_counter() - t0
+        self.metrics.histogram("service.infer_s").observe(t_inf)
+        for s in slots:
+            self._scatter(
+                s, preds[(s.inflight.req.req_id, s.item.part_index)], t_inf
+            )
+
+    @staticmethod
+    def _slot_dead(slot: _Slot) -> bool:
+        return slot.inflight.failed or slot.inflight.req.event.is_set()
+
     def _device_loop(self) -> None:
+        """Crash containment around the batching loop: the device worker
+        must never die silently — an escaped exception (including an
+        injected :class:`~repro.faults.WorkerKilled`) fails every pending
+        ticket so pollers/result() unblock with an attributed error."""
+        try:
+            self._device_loop_inner()
+        except BaseException as e:  # noqa: BLE001 — worker-death containment
+            self.metrics.counter("service.worker_deaths").inc()
+            with self._lock:
+                pending = [
+                    r for r in self._requests.values() if not r.event.is_set()
+                ]
+            for r in pending:
+                self._fail(r, RuntimeError(f"device worker crashed: {e!r}"))
+
+    def _device_loop_inner(self) -> None:
         """Continuous batching: one device call per iteration, re-draining
         the queue in between.  The pool orders items by (priority, seq);
         each iteration runs one pack of the globally most-urgent bucket —
@@ -751,64 +999,31 @@ class VerificationService:
                 return
             for prepared in drained:
                 self._admit(prepared, pool, streamed)
-            shape = pool.best_bucket()
-            if shape is None and not streamed:
-                continue
+            # release pool occupancy of failed / finished / expired slots
+            # every cycle — no failure path leaves ghosts in the heaps
+            pool.prune(self._slot_dead)
+            while streamed and self._slot_dead(streamed[0][2]):
+                heapq.heappop(streamed)
             self.metrics.gauge("service.pending_items").set(
                 len(pool) + len(streamed)
             )
+            shape = pool.best_bucket()
+            if shape is None and not streamed:
+                continue
             if streamed and (
                 shape is None or streamed[0][:2] < pool.head_key(shape)
             ):
-                # oversized item: partitioned + streamed through the shared
-                # runner (one whole-item unit; its sub-launches batch
-                # internally at stream_capacity)
                 _, _, slot = heapq.heappop(streamed)
-                if slot.inflight.failed:
-                    continue
-                try:
-                    t0 = time.perf_counter()
-                    self.metrics.histogram("service.admission_s").observe(
-                        t0 - slot.inflight.t_enq
-                    )
-                    slot.inflight.req.streamed = True
-                    self._mark(slot.inflight.req, "admitted")
-                    preds = self.scheduler.run_one(slot.item)
-                    t_inf = time.perf_counter() - t0
-                    self.metrics.histogram("service.infer_s").observe(t_inf)
-                    key = (slot.inflight.req.req_id, slot.item.part_index)
-                    self._scatter(slot, preds[key], t_inf)
-                except Exception as e:  # noqa: BLE001
-                    self._fail_inflight(slot.inflight, e)
+                if not self._slot_dead(slot):
+                    self._run_streamed_slot(slot)
                 continue
             taken = pool.take(shape, self.scheduler.capacity)
-            slots = [s for (_, _, s) in taken if not s.inflight.failed]
-            if not slots:
-                continue
-            try:
-                t0 = time.perf_counter()
-                for s in slots:
-                    self.metrics.histogram("service.admission_s").observe(
-                        t0 - s.inflight.t_enq
-                    )
-                    if s.inflight.req.bucket is None:
-                        s.inflight.req.bucket = (shape.n_pad, shape.e_pad)
-                        s.inflight.req.bucket_capacity = self.scheduler.capacity
-                    self._mark(s.inflight.req, "admitted")
-                preds = self.scheduler.run_pack([s.item for s in slots], shape)
-                t_inf = time.perf_counter() - t0
-                self.metrics.histogram("service.infer_s").observe(t_inf)
-                for s in slots:
-                    self._scatter(
-                        s, preds[(s.inflight.req.req_id, s.item.part_index)],
-                        t_inf,
-                    )
-            except Exception as e:  # noqa: BLE001
-                for s in slots:
-                    self._fail_inflight(s.inflight, e)
+            self._run_pack_slots([s for (_, _, s) in taken], shape)
 
     def _finalize(self, req, key, prep, pred: np.ndarray, timings: dict) -> None:
         try:
+            if self._expire_if_due(req):
+                return
             t0 = time.perf_counter()
             acc = gnn.accuracy(pred, prep.labels)
             verdict = None

@@ -1,0 +1,620 @@
+"""Failure-domain hardening: fault injection, retry policy, parser
+hardening, crash-safe journaling, degradation, and service blast-radius
+isolation.
+
+Fast lane, untrained params throughout — these tests pin *failure
+semantics* (who fails, who survives, what never hangs), not accuracy:
+
+  * ``repro.faults``: deterministic seeded triggering (p / nth / every /
+    match / max_fires), the spec grammar round-trip, latency-only kinds;
+  * ``repro.distributed.fault_tolerance``: the ONE retry/backoff policy
+    (deterministic delays, transient classification, bounded replays);
+  * ``repro.io.aiger``: malformed input raises typed, byte-offset
+    ``AigerParseError`` — fuzz-style over mutations of a valid file;
+  * ``PartitionJournal``: atomic commit/restore, fingerprint-mismatch
+    wipe, corrupt-entry tolerance;
+  * ``StreamingExecutor``: resource-error capacity degradation (bit-exact
+    results at reduced capacity), prefetch-death watchdog (loud failure,
+    never a silent hang), journaled resume after a mid-run crash;
+  * ``VerificationService``: deadlines (expired tickets fail, poll/result
+    never block forever), transient-launch retries, pack bisection (a
+    poisoned design fails alone), worker-death containment, and resource
+    release on every failure path (tenant slots, pool occupancy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.checkpoint import PartitionJournal
+from repro.core import aig as A
+from repro.core import gnn
+from repro.core.features import groot_features
+from repro.core.partition import PARTITIONERS
+from repro.core.regrowth import extract_partitions
+from repro.distributed.fault_tolerance import (
+    backoff_delays,
+    is_transient,
+    retry_call,
+)
+from repro.exec import StreamingExecutor, plan_from_subgraphs
+from repro.io import aiger
+from repro.service import VerificationService
+from repro.service.server import DeadlineExceeded
+
+
+@pytest.fixture(scope="module")
+def rand_params():
+    return gnn.init_params(gnn.GNNConfig(), jax.random.key(0))
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """Every test starts and ends with no installed fault plan."""
+    faults.uninstall()
+    yield
+    faults.uninstall()
+
+
+def _partitioned(bits=12, k=4, seed=0):
+    d = A.csa_multiplier(bits)
+    g = d.to_edge_graph()
+    feats = groot_features(d)
+    part = PARTITIONERS["multilevel"](g, k, seed=seed)
+    subs = extract_partitions(g, part, regrow=True)
+    plan = plan_from_subgraphs(list(subs), g.num_nodes, min_nodes=64,
+                               min_edges=128)
+    return plan, feats
+
+
+def make_service(params, **overrides):
+    overrides.setdefault("num_partitions", 1)
+    overrides.setdefault("prepare_workers", 2)
+    return VerificationService(params, _warn=False, **overrides)
+
+
+class GatedRunner:
+    """Wraps a BucketRunner: every call blocks until ``release()`` — the
+    deterministic-interleaving trick from test_service_loop."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self._gate = threading.Event()
+        self.entered = threading.Event()
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def release(self):
+        self._gate.set()
+
+    def __call__(self, batch):
+        self.entered.set()
+        assert self._gate.wait(timeout=60.0), "gate never released"
+        return self._inner(batch)
+
+
+def wait_for(cond, timeout=30.0, msg="condition"):
+    t0 = time.perf_counter()
+    while not cond():
+        if time.perf_counter() - t0 > timeout:
+            raise AssertionError(f"timed out waiting for {msg}")
+        time.sleep(0.005)
+
+
+# ---------------------------------------------------------------------------
+# repro.faults: the injection mechanism itself
+# ---------------------------------------------------------------------------
+
+def test_plan_spec_grammar_roundtrip():
+    spec = ("service.device:p=0.2,kind=transient,seed=7;"
+            "io.parse:nth=3,match=booth,kind=fatal")
+    plan = faults.FaultPlan.parse(spec)
+    assert plan.seed == 7 and len(plan.specs) == 2
+    assert plan.specs[0].p == 0.2 and plan.specs[1].nth == 3
+    assert plan.specs[1].match == "booth"
+    # the round-trip parses back to the same plan
+    assert faults.FaultPlan.parse(plan.to_spec()) == plan
+    assert faults.FaultPlan.coerce(plan) is plan
+    assert not faults.FaultPlan()
+    assert bool(plan)
+
+
+def test_plan_rejects_unknown_site_and_kind():
+    with pytest.raises(ValueError):
+        faults.FaultPlan.parse("nope.site:p=1")
+    with pytest.raises(ValueError):
+        faults.FaultPlan.parse("io.parse:kind=meteor")
+    with pytest.raises(ValueError):
+        faults.FaultPlan.parse("io.parse:frequency=2")
+
+
+def test_probability_trigger_is_deterministic_per_seed():
+    def fires(seed):
+        out = []
+        with faults.injected(f"io.parse:p=0.3,kind=transient,seed={seed}"):
+            for i in range(50):
+                try:
+                    faults.fire("io.parse")
+                    out.append(False)
+                except faults.TransientFault:
+                    out.append(True)
+        return out
+
+    a, b = fires(11), fires(11)
+    assert a == b                      # same seed -> same failures
+    assert any(a) and not all(a)       # ~30%: some fire, some don't
+    assert fires(12) != a              # a different seed differs
+
+
+def test_nth_every_match_and_max_fires():
+    with faults.injected("io.parse:nth=2,kind=fatal") as inj:
+        faults.fire("io.parse")
+        with pytest.raises(faults.FatalFault):
+            faults.fire("io.parse")
+        faults.fire("io.parse")        # nth fires exactly once
+        assert inj.stats()["fired"]["io.parse"] == 1
+
+    with faults.injected("io.parse:every=2,max_fires=2,kind=transient"):
+        hits = 0
+        for _ in range(10):
+            try:
+                faults.fire("io.parse")
+            except faults.TransientFault:
+                hits += 1
+        assert hits == 2               # every 2nd call, capped at 2 fires
+
+    with faults.injected("io.parse:every=1,match=bad,kind=fatal"):
+        faults.fire("io.parse", tag="good_design")
+        with pytest.raises(faults.FatalFault) as ei:
+            faults.fire("io.parse", tag="bad_design")
+        assert "bad_design" in str(ei.value)
+
+
+def test_latency_only_kind_delays_without_raising():
+    with faults.injected("cache.load:every=1,latency=0.05,kind=latency"):
+        t0 = time.perf_counter()
+        faults.fire("cache.load")
+        assert time.perf_counter() - t0 >= 0.045
+
+
+def test_lazy_tag_not_evaluated_when_inactive():
+    evaluated = []
+    faults.fire("io.parse", tag=lambda: evaluated.append(1))
+    assert not evaluated
+    with faults.injected("io.parse:every=1,kind=transient"):
+        with pytest.raises(faults.TransientFault):
+            faults.fire("io.parse", tag=lambda: (evaluated.append(1), "t")[1])
+    assert evaluated
+
+
+def test_injected_restores_previous_plan():
+    outer = faults.install("io.parse:every=1,kind=fatal")
+    try:
+        with faults.injected("cache.load:every=1,kind=transient"):
+            assert faults.active() is not outer
+            faults.fire("io.parse")          # outer plan inactive inside
+        assert faults.active() is outer
+        with pytest.raises(faults.FatalFault):
+            faults.fire("io.parse")
+    finally:
+        faults.uninstall()
+
+
+def test_is_resource_error_classification():
+    assert faults.is_resource_error(faults.ResourceFault("x"))
+    assert faults.is_resource_error(MemoryError())
+    assert faults.is_resource_error(RuntimeError("RESOURCE_EXHAUSTED: hbm"))
+    assert not faults.is_resource_error(faults.TransientFault("x"))
+    assert not faults.is_resource_error(ValueError("nope"))
+
+
+# ---------------------------------------------------------------------------
+# distributed.fault_tolerance: the shared retry/backoff policy
+# ---------------------------------------------------------------------------
+
+def test_backoff_delays_deterministic_and_bounded():
+    a = list(backoff_delays(5, seed=3))
+    assert a == list(backoff_delays(5, seed=3))
+    assert a != list(backoff_delays(5, seed=4))
+    assert len(a) == 5 and all(0 < d <= 5.0 * 1.5 for d in a)
+    # exponential spine: later delays dominate earlier ones on average
+    assert sum(a[3:]) > sum(a[:2])
+    assert list(backoff_delays(0)) == []
+
+
+def test_is_transient_classifier():
+    assert is_transient(faults.TransientFault("x"))
+    assert is_transient(ConnectionError())
+    assert is_transient(TimeoutError())
+    assert is_transient(RuntimeError("UNAVAILABLE: device busy"))
+    assert not is_transient(faults.FatalFault("poisoned"))
+    assert not is_transient(ValueError("bad input"))
+
+
+def test_retry_call_replays_transients_and_respects_fatal():
+    calls, retries = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise faults.TransientFault("blip")
+        return "ok"
+
+    out = retry_call(flaky, retries=3, on_retry=lambda i, e: retries.append(i),
+                     sleep=lambda s: None)
+    assert out == "ok" and len(calls) == 3 and retries == [0, 1]
+
+    with pytest.raises(faults.FatalFault):
+        retry_call(lambda: (_ for _ in ()).throw(faults.FatalFault("dead")),
+                   retries=5, sleep=lambda s: None)
+
+    # budget exhaustion re-raises the last transient
+    with pytest.raises(faults.TransientFault):
+        retry_call(lambda: (_ for _ in ()).throw(faults.TransientFault("x")),
+                   retries=2, sleep=lambda s: None)
+
+
+# ---------------------------------------------------------------------------
+# io.aiger hardening: typed, byte-attributed parse errors
+# ---------------------------------------------------------------------------
+
+def test_truncated_binary_section_raises_offset_error():
+    good = aiger.dumps(A.csa_multiplier(6))
+    with pytest.raises(aiger.AigerParseError) as ei:
+        aiger.loads(good[: len(good) // 2])
+    assert "at byte" in str(ei.value)
+    assert ei.value.offset is not None
+
+
+def test_header_count_sanity():
+    with pytest.raises(aiger.AigerParseError):
+        aiger.loads(b"aig 5 2 0 1 -3\n")
+    # counts absurdly larger than the file must be rejected before sizing
+    # any allocation
+    with pytest.raises(aiger.AigerParseError):
+        aiger.loads(b"aig 999999999 2 0 1 999999997\n")
+    with pytest.raises(aiger.AigerParseError):
+        aiger.loads(b"aig x y z\n")
+
+
+def test_bad_ascii_and_line_raises():
+    bad = b"aag 3 2 0 1 1\n2\n4\n6\n6 4 banana\n"
+    with pytest.raises(aiger.AigerParseError) as ei:
+        aiger.loads(bad)
+    assert "AND line" in str(ei.value)
+
+
+def test_fuzz_mutations_never_escape_typed_errors():
+    """Truncations and byte flips of a valid file either parse or raise
+    AigerError — never IndexError/struct.error/MemoryError."""
+    good = aiger.dumps(A.csa_multiplier(4))
+    rng = np.random.default_rng(0)
+    cases = [good[:n] for n in range(0, len(good), 7)]
+    for _ in range(60):
+        buf = bytearray(good)
+        for _ in range(rng.integers(1, 4)):
+            buf[rng.integers(0, len(buf))] = rng.integers(0, 256)
+        cases.append(bytes(buf))
+    for blob in cases:
+        try:
+            aiger.loads(blob)
+        except aiger.AigerError:
+            pass          # typed rejection is the contract
+
+
+def test_io_parse_fault_site_fires_with_design_tag():
+    good = aiger.dumps(A.csa_multiplier(4))
+    with faults.injected("io.parse:every=1,kind=fatal"):
+        with pytest.raises(faults.FatalFault):
+            aiger.loads(good)
+    assert aiger.loads(good).num_ands > 0       # no plan: parses fine
+
+
+# ---------------------------------------------------------------------------
+# PartitionJournal: atomic commit / restore / invalidation
+# ---------------------------------------------------------------------------
+
+def test_journal_commit_restore_roundtrip(tmp_path):
+    plan, _ = _partitioned()
+    j = PartitionJournal(tmp_path, "designA")
+    assert j.open(plan) == set()
+    ref = np.arange(plan.num_nodes, dtype=np.int32) % 5
+    for i in (0, 2):
+        sg = plan.subgraphs[i]
+        ids = sg.global_ids[: sg.num_core]
+        j.commit(i, ids, ref[ids])
+    out = np.zeros(plan.num_nodes, dtype=np.int32)
+    j2 = PartitionJournal(tmp_path, "designA")    # fresh process view
+    restored = j2.restore(plan, out)
+    assert restored == {0, 2}
+    for i in restored:
+        sg = plan.subgraphs[i]
+        ids = sg.global_ids[: sg.num_core]
+        np.testing.assert_array_equal(out[ids], ref[ids])
+    j2.complete()
+    assert not j2.dir.exists()
+
+
+def test_journal_wiped_on_plan_fingerprint_mismatch(tmp_path):
+    plan, _ = _partitioned(k=4)
+    other, _ = _partitioned(k=6)
+    j = PartitionJournal(tmp_path, "d")
+    j.open(plan)
+    sg = plan.subgraphs[0]
+    ids = sg.global_ids[: sg.num_core]
+    j.commit(0, ids, np.zeros(len(ids), np.int32))
+    # same design key, different partitioning -> stale indices, wiped
+    assert PartitionJournal(tmp_path, "d").restore(
+        other, np.zeros(other.num_nodes, np.int32)
+    ) == set()
+
+
+def test_journal_tolerates_corrupt_entries(tmp_path):
+    plan, _ = _partitioned()
+    j = PartitionJournal(tmp_path, "d")
+    j.open(plan)
+    sg = plan.subgraphs[1]
+    ids = sg.global_ids[: sg.num_core]
+    j.commit(1, ids, np.ones(len(ids), np.int32))
+    (j.dir / "part_00003.npz").write_bytes(b"not an npz")   # torn write
+    out = np.zeros(plan.num_nodes, np.int32)
+    assert PartitionJournal(tmp_path, "d").restore(plan, out) == {1}
+    assert not (j.dir / "part_00003.npz").exists()          # dropped
+
+
+# ---------------------------------------------------------------------------
+# StreamingExecutor: degradation, watchdog, resume
+# ---------------------------------------------------------------------------
+
+def test_resource_error_halves_capacity_bit_exact(rand_params):
+    plan, feats = _partitioned(k=4)
+    baseline = StreamingExecutor(rand_params, "ref", capacity=2, prefetch=0)
+    want = baseline.run_plan(plan, feats)
+
+    # the degradation premise needs a multi-slot batch to split
+    assert any(len(ix) > 1 for _, ix in plan.schedule(2))
+    ex = StreamingExecutor(rand_params, "ref", capacity=2, prefetch=0)
+    with faults.injected("exec.launch:nth=1,kind=resource"):
+        got = ex.run_plan(plan, feats)
+    np.testing.assert_array_equal(got, want)
+    assert ex.stats.capacity_halvings >= 1
+
+
+def test_resource_error_on_singleton_propagates(rand_params):
+    plan, feats = _partitioned(k=4)
+    ex = StreamingExecutor(rand_params, "ref", capacity=2, prefetch=0)
+    with faults.injected("exec.launch:every=1,kind=resource"):
+        with pytest.raises(faults.ResourceFault):
+            ex.run_plan(plan, feats)
+
+
+def test_prefetch_death_is_detected_not_a_hang(rand_params):
+    plan, feats = _partitioned(k=6)
+    assert len(plan.schedule(1)) > 1
+    ex = StreamingExecutor(rand_params, "ref", capacity=1, prefetch=1)
+    with faults.injected("exec.prefetch:nth=2,kind=kill"):
+        t0 = time.perf_counter()
+        with pytest.raises(RuntimeError, match="prefetch thread died"):
+            ex.run_plan(plan, feats)
+        assert time.perf_counter() - t0 < 30.0
+
+
+def test_forwarded_prefetch_exception_still_raises(rand_params):
+    plan, feats = _partitioned(k=6)
+    ex = StreamingExecutor(rand_params, "ref", capacity=1, prefetch=1)
+    with faults.injected("exec.prefetch:nth=2,kind=fatal"):
+        with pytest.raises(faults.FatalFault):
+            ex.run_plan(plan, feats)
+
+
+def test_killed_run_resumes_only_unfinished_partitions(
+        rand_params, tmp_path):
+    plan, feats = _partitioned(k=6)
+    total = plan.num_parts
+    want = StreamingExecutor(rand_params, "ref", capacity=1,
+                             prefetch=0).run_plan(plan, feats)
+
+    journal = PartitionJournal(tmp_path, "csa12")
+    ex = StreamingExecutor(rand_params, "ref", capacity=1, prefetch=0)
+    # the "crash": a fatal fault partway through the launch sequence
+    with faults.injected("exec.launch:nth=3,kind=fatal"):
+        with pytest.raises(faults.FatalFault):
+            ex.run_plan(plan, feats, journal=journal)
+    committed = len(list(journal.dir.glob("part_*.npz")))
+    assert 0 < committed < total
+
+    ex2 = StreamingExecutor(rand_params, "ref", capacity=1, prefetch=0)
+    got = ex2.run_plan(plan, feats,
+                       journal=PartitionJournal(tmp_path, "csa12"))
+    np.testing.assert_array_equal(got, want)
+    assert ex2.stats.resumed_partitions == committed
+    assert ex2.stats.partitions == total - committed    # only the rest ran
+    assert not journal.dir.exists()                     # cleared when done
+
+
+def test_session_config_threads_checkpoint_dir(tmp_path, rand_params):
+    """checkpoint_dir flows SessionConfig -> PipelineConfig -> journal."""
+    from repro.api import Session, SessionConfig
+
+    cfg = SessionConfig(num_partitions=4, checkpoint_dir=str(tmp_path),
+                        bits=10)
+    pcfg = cfg.pipeline_config()
+    assert pcfg.checkpoint_dir == str(tmp_path) and pcfg.resume
+    sess = Session(rand_params, cfg)
+    r = sess.verify(verify=False, use_cache=False)
+    assert r.status == "classified"
+    # a completed run leaves no journal behind
+    assert not any(tmp_path.iterdir())
+
+
+# ---------------------------------------------------------------------------
+# VerificationService: deadlines, retries, bisection, containment, leaks
+# ---------------------------------------------------------------------------
+
+def test_deadline_expires_slow_ticket(rand_params):
+    svc = make_service(rand_params, deadline_s=0.05)
+    try:
+        with faults.injected("service.prepare:every=1,latency=0.4,kind=latency"):
+            t = svc.submit(dataset="csa", bits=4, verify=False)
+            r = svc.result(t, timeout=30.0)
+        assert r.status == "error"
+        assert "DeadlineExceeded" in r.error
+        snap = svc.metrics.snapshot()
+        assert snap["counters"]["service.deadline_exceeded"] >= 1
+        rec = svc.flights.records(failures_only=True)[-1]
+        assert rec.deadline_s == 0.05
+    finally:
+        svc.close()
+
+
+def test_poll_fails_expired_ticket_instead_of_none_forever(rand_params):
+    svc = make_service(rand_params)
+    try:
+        with faults.injected("service.prepare:every=1,latency=0.5,kind=latency"):
+            t = svc.submit(dataset="csa", bits=4, verify=False,
+                           deadline_s=0.02)
+            time.sleep(0.05)
+            r = svc.poll(t)             # poll itself expires the ticket
+        assert r is not None and r.status == "error"
+    finally:
+        svc.close()
+
+
+def test_transient_launch_failures_retry_to_success(rand_params):
+    svc = make_service(rand_params, launch_retries=3, retry_backoff_s=0.01)
+    try:
+        with faults.injected("service.device:every=1,max_fires=2,kind=transient"):
+            t = svc.submit(dataset="csa", bits=4, verify=False)
+            r = svc.result(t, timeout=60.0)
+        assert r.status == "classified"           # survived the blips
+        snap = svc.metrics.snapshot()
+        assert snap["counters"]["service.retries"] == 2
+        rec = [f for f in svc.flights.records() if f.req_id == t][-1]
+        assert rec.retries == 2
+    finally:
+        svc.close()
+
+
+def test_fatal_launch_failure_not_retried(rand_params):
+    svc = make_service(rand_params, launch_retries=3, retry_backoff_s=0.01)
+    try:
+        with faults.injected("service.device:nth=1,kind=fatal"):
+            t = svc.submit(dataset="csa", bits=4, verify=False)
+            r = svc.result(t, timeout=60.0)
+        assert r.status == "error" and "FatalFault" in r.error
+        assert "service.retries" not in svc.metrics.snapshot()["counters"]
+    finally:
+        svc.close()
+
+
+def test_bisection_isolates_poisoned_design(rand_params):
+    """Four same-bucket designs packed together, one poisoned: the three
+    well-formed tickets complete, the poisoned one fails alone with an
+    attributed name."""
+    svc = make_service(rand_params, capacity=4, prepare_workers=4,
+                       launch_retries=0, coalesce=False)
+    gate = GatedRunner(svc.scheduler.runner)
+    svc.scheduler.runner = gate
+    designs = [A.csa_multiplier(6) for _ in range(4)]
+    designs[2] = dataclasses.replace(designs[2], name="poison_csa6")
+    try:
+        with faults.injected("service.device:every=1,match=poison,kind=fatal"):
+            t_first = svc.submit(dataset="csa", bits=4, verify=False)
+            assert gate.entered.wait(timeout=30.0)
+            tickets = [svc.submit(design=d, verify=False, seed=i)
+                       for i, d in enumerate(designs)]
+            wait_for(lambda: svc._device_q.qsize() >= 4,
+                     msg="all four prepared")
+            gate.release()
+            results = {t: svc.result(t, timeout=60.0) for t in tickets}
+            svc.result(t_first, timeout=60.0)
+        good = [r for r in results.values() if r.name != "poison_csa6"]
+        bad = [r for r in results.values() if r.name == "poison_csa6"]
+        assert len(bad) == 1 and bad[0].status == "error"
+        assert "FatalFault" in bad[0].error
+        assert all(r.status == "classified" for r in good)
+        snap = svc.metrics.snapshot()
+        assert snap["counters"].get("service.bisections", 0) >= 1
+        rec = [f for f in svc.flights.records(failures_only=True)
+               if f.name == "poison_csa6"][-1]
+        assert rec.failed_stage == "infer"
+    finally:
+        gate.release()
+        svc.close()
+
+
+def test_worker_death_fails_pending_tickets_not_hangs(rand_params):
+    svc = make_service(rand_params)
+    try:
+        with faults.injected("service.device:nth=1,kind=kill"):
+            t = svc.submit(dataset="csa", bits=4, verify=False)
+            t0 = time.perf_counter()
+            r = svc.result(t, timeout=60.0)
+            assert time.perf_counter() - t0 < 30.0
+        assert r.status == "error"
+        assert "worker" in r.error
+        assert svc.metrics.snapshot()["counters"]["service.worker_deaths"] == 1
+        # later tickets fail fast too instead of queueing forever
+        t2 = svc.submit(dataset="csa", bits=4, seed=1, verify=False)
+        r2 = svc.result(t2, timeout=30.0)
+        assert r2.status == "error"
+    finally:
+        svc.close()
+
+
+def test_result_timeout_raises(rand_params):
+    svc = make_service(rand_params)
+    try:
+        with faults.injected("service.prepare:every=1,latency=1.0,kind=latency"):
+            t = svc.submit(dataset="csa", bits=4, verify=False)
+            with pytest.raises(TimeoutError):
+                svc.result(t, timeout=0.05)
+            r = svc.result(t, timeout=30.0)     # still completes afterwards
+        assert r.status == "classified"
+    finally:
+        svc.close()
+
+
+def test_failure_paths_release_tenant_and_pool_resources(rand_params):
+    """A storm of failing tickets must leave zero residue: tenant slots
+    free (no AdmissionError once failures finish), the in-flight map
+    empty, and no ghost occupancy in the device pool."""
+    svc = make_service(rand_params, max_inflight_per_tenant=5,
+                       coalesce=False)
+    try:
+        with faults.injected("service.prepare:every=1,kind=fatal"):
+            for i in range(40):
+                t = svc.submit(dataset="csa", bits=4, seed=i, verify=False,
+                               tenant="storm")
+                r = svc.result(t, timeout=30.0)
+                assert r.status == "error"
+        assert svc._tenant_inflight == {}
+        gauges = svc.metrics.snapshot()["gauges"]
+        assert gauges.get("service.pending_items", {}).get("value", 0) == 0
+        # the lane is genuinely clean: a healthy submit still works
+        t = svc.submit(dataset="csa", bits=4, seed=999, verify=False,
+                       tenant="storm")
+        assert svc.result(t, timeout=60.0).status == "classified"
+    finally:
+        svc.close()
+
+
+def test_slot_pool_prune_releases_dead_occupancy():
+    from repro.service import SlotPool
+    from repro.service.bucketing import BucketShape
+
+    pool = SlotPool()
+    a = BucketShape(64, 128)
+    pool.admit(a, 1, 0, "live")
+    pool.admit(a, 1, 1, "dead")
+    assert pool.prune(lambda s: s == "dead") == 1
+    assert len(pool) == 1
+    assert [s for (_, _, s) in pool.take(a, 4)] == ["live"]
+    assert pool.prune(lambda s: True) == 0      # empty heaps vanish cleanly
