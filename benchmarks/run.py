@@ -44,6 +44,7 @@ def main(argv=None):
         bench_memory,
         bench_partitioned,
         bench_service,
+        bench_sharded,
         bench_spmm,
         bench_verification,
     )
@@ -72,6 +73,8 @@ def main(argv=None):
          bench_partitioned.main),
         ("chaos", "failure-domain chaos gates (repro.faults)",
          bench_chaos.main),
+        ("sharded", "sharded mesh streaming (repro.mesh)",
+         bench_sharded.main),
     ]
     if args.suites:
         known = {k for k, _, _ in suites}

@@ -13,9 +13,9 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.configs import get_config
-from repro.configs.base import materialize, model_spec_tree
-from repro.serving.decode import greedy_generate, make_prefill_step, make_serve_step
+from repro.zoo.configs import get_config
+from repro.zoo.configs.base import materialize, model_spec_tree
+from repro.zoo.serving.decode import greedy_generate, make_prefill_step, make_serve_step
 
 cfg = get_config("qwen3-8b", smoke=True)
 params = materialize(model_spec_tree(cfg), jax.random.key(0), jnp.float32)

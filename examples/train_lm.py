@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 sys.path.insert(0, "src")
 
-from repro.configs.base import ModelConfig, materialize, model_spec_tree
+from repro.zoo.configs.base import ModelConfig, materialize, model_spec_tree
 from repro.distributed.fault_tolerance import ResilientLoop
 from repro.launch.mesh import make_host_mesh
 from repro.sharding.rules import make_rules, tree_shardings, use_sharding

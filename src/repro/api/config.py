@@ -68,6 +68,11 @@ class SessionConfig:
     memory_budget_bytes: Optional[int] = None
     stream_capacity: int = 2
     stream_prefetch: int = 1
+    #: device-mesh sharding of the streamed route (repro.mesh): None =
+    #: auto (shard across every visible device when more than one
+    #: exists), 1 = force the single-device executor, N = shard across
+    #: the first N visible devices (``repro verify --devices N``)
+    mesh_devices: Optional[int] = None
 
     # -- batched service (repro.service; the submit()/poll() path) ----------
     capacity: int = 2
@@ -170,6 +175,7 @@ class SessionConfig:
             stream_capacity=self.stream_capacity,
             stream_prefetch=self.stream_prefetch,
             stream_dtype=self.stream_dtype,
+            mesh_devices=self.mesh_devices,
             checkpoint_dir=self.checkpoint_dir,
             resume=self.resume,
         )
@@ -226,6 +232,7 @@ class SessionConfig:
             memory_budget_bytes=cfg.memory_budget_bytes,
             stream_capacity=cfg.stream_capacity,
             stream_prefetch=cfg.stream_prefetch,
+            mesh_devices=cfg.mesh_devices,
             checkpoint_dir=cfg.checkpoint_dir,
             resume=cfg.resume,
         )
@@ -237,4 +244,5 @@ class SessionConfig:
             self.num_partitions, self.regrow, self.regrow_hops,
             self.partitioner, self.streaming, self.memory_budget_bytes,
             self.stream_capacity, self.min_nodes, self.min_edges,
+            self.mesh_devices,
         )

@@ -20,6 +20,9 @@ against the analytic device-memory model and the config:
   mode "partitioned"  sequential per-subgraph loop (``streaming=False``)
   mode "streamed"     the ``repro.exec`` executor: bucketed packed
                       launches, budget-driven k, host prefetch
+  mode "sharded"      the streamed route fanned over a device mesh
+                      (``repro.mesh``) when >1 device is visible or
+                      ``mesh_devices`` asks for it
 
 Legacy front doors (`run_pipeline`, `VerificationService`,
 `gnn.predict_partitioned`) delegate here and emit ``DeprecationWarning``.
@@ -61,6 +64,7 @@ class RoutingDecision:
     """Why a design runs the way it runs (``session.explain()``)."""
 
     mode: str                         # "full" | "partitioned" | "streamed"
+                                      # | "sharded"
     backend: str
     stream_dtype: Optional[str]       # effective staged-stream dtype (None=f32)
     k: int                            # partition count (1 for full)
@@ -70,10 +74,14 @@ class RoutingDecision:
     modeled_peak_bytes: int           # what is actually resident: full bytes,
                                       # max per-subgraph, or the packed-launch
                                       # peak (capacity slots of the big bucket)
+                                      # — PER DEVICE in sharded mode
     memory_budget_bytes: Optional[int]
     num_nodes: int
     num_edges: int
     reason: str
+    #: mesh data shards the streamed route launches over (1 = the
+    #: single-device executor; >1 = mode "sharded" through repro.mesh)
+    mesh_devices: int = 1
 
 
 @dataclasses.dataclass
@@ -104,6 +112,21 @@ class SessionResult:
 # SessionConfig exposes the same (stream_dtype, gnn) attributes, so the
 # pipeline's normalisation rule is THE rule — no second copy to drift
 _effective_stream_dtype = P._effective_stream_dtype
+
+
+def resolve_mesh_devices(mesh_devices: Optional[int]) -> int:
+    """The mesh data shards a streamed route will launch over.
+
+    None = auto: every visible device when more than one exists (the
+    single-device host keeps the plain executor).  An explicit count is
+    validated against the visible devices by :class:`~repro.mesh.MeshRunner`
+    at execution time; routing only clamps the trivial cases.
+    """
+    if mesh_devices is not None:
+        return max(1, int(mesh_devices))
+    import jax
+
+    return jax.local_device_count()
 
 
 def route_prepared(prep: P.PreparedDesign, cfg: SessionConfig) -> RoutingDecision:
@@ -164,12 +187,32 @@ def _route_with_plan(prep: P.PreparedDesign, cfg: SessionConfig):
             f"k={k} partitions requested, streamed as "
             f"{plan.num_buckets}-bucket packed launches"
         )
+    peak = plan.peak_batch_memory_bytes(pcfg.gnn, cfg.stream_capacity)
+    devices = resolve_mesh_devices(cfg.mesh_devices)
+    if devices > 1:
+        # the packed batches are independent until the verdict scatter
+        # (GROOT Alg. 1), so the stream shards across the mesh data axis;
+        # each lane launches the same canonical bucket shapes, so the
+        # per-device peak equals the single-device packed peak
+        from repro.mesh import build_mesh_plan
+
+        mplan = build_mesh_plan(plan, devices, cfg.stream_capacity)
+        reason += (
+            f"; sharded across {devices} devices x k={k} x "
+            f"{plan.num_buckets} bucket(s), modeled per-device peak "
+            f"{peak / 1e6:.1f} MB, launch speedup "
+            f"{mplan.modeled_speedup:.2f}x"
+        )
+        return RoutingDecision(
+            mode="sharded", k=k, num_buckets=plan.num_buckets,
+            buckets=tuple((b.n_pad, b.e_pad) for b in plan.buckets),
+            modeled_peak_bytes=peak, mesh_devices=devices,
+            reason=reason, **common,
+        ), plan
     return RoutingDecision(
         mode="streamed", k=k, num_buckets=plan.num_buckets,
         buckets=tuple((b.n_pad, b.e_pad) for b in plan.buckets),
-        modeled_peak_bytes=plan.peak_batch_memory_bytes(
-            pcfg.gnn, cfg.stream_capacity
-        ),
+        modeled_peak_bytes=peak,
         reason=reason, **common,
     ), plan
 
@@ -337,6 +380,21 @@ class Session:
             min_edges=self.config.min_edges,
         )
 
+    def _mesh_executor(self, num_devices: int):
+        from repro.mesh import shared_mesh_executor
+
+        return shared_mesh_executor(
+            self.params, self.config.backend or "ref",
+            num_devices=num_devices,
+            capacity=self.config.stream_capacity,
+            prefetch=self.config.stream_prefetch,
+            stream_dtype=_effective_stream_dtype(self.config),
+            min_nodes=self.config.min_nodes,
+            min_edges=self.config.min_edges,
+            launch_retries=self.config.launch_retries,
+            retry_backoff_s=self.config.retry_backoff_s,
+        )
+
     def verify(self, design=None, *, dataset: Optional[str] = None,
                bits: Optional[int] = None, seed: Optional[int] = None,
                verify: bool = True, signed: Optional[bool] = None,
@@ -416,9 +474,13 @@ class Session:
                             stream_dtype=decision.stream_dtype,
                         ), {}
                     else:
+                        executor = (
+                            self._mesh_executor(decision.mesh_devices)
+                            if decision.mode == "sharded"
+                            else self._stream_executor()
+                        )
                         pred, exec_stats = P.infer_streaming(
-                            self.params, prep,
-                            executor=self._stream_executor(), plan=plan,
+                            self.params, prep, executor=executor, plan=plan,
                         )
                 pc_after = PLAN_CACHE.snapshot()
                 t_inf = time.perf_counter() - t0
@@ -426,8 +488,11 @@ class Session:
                 met.histogram("session.infer_s").observe(t_inf)
                 if exec_stats:
                     # model-vs-actual memory accounting: high-water gauges,
-                    # not counters — a peak must never accumulate
-                    for g in ("modeled_peak_bytes", "actual_peak_bytes"):
+                    # not counters — a peak must never accumulate.  The
+                    # mesh width ("devices") is likewise a level, not a
+                    # rate
+                    for g in ("modeled_peak_bytes", "actual_peak_bytes",
+                              "devices"):
                         if exec_stats.get(g):
                             met.gauge(f"exec.{g}").set(exec_stats[g])
                     # per-run executor stats accumulate into the session
@@ -435,10 +500,12 @@ class Session:
                     # histograms) and the raw totals report() exposes
                     fold_into(met, "exec", {
                         k_: v_ for k_, v_ in exec_stats.items()
-                        if not k_.endswith("peak_bytes")
+                        if not k_.endswith("peak_bytes") and k_ != "devices"
                     })
                     for k_, v_ in exec_stats.items():
-                        if isinstance(v_, (int, float)) and not isinstance(v_, bool):
+                        if k_ == "devices":
+                            self.obs.exec_totals[k_] = v_
+                        elif isinstance(v_, (int, float)) and not isinstance(v_, bool):
                             if k_.endswith("peak_bytes") or k_ == "model_drift":
                                 # peaks/ratios keep their high-water mark
                                 self.obs.exec_totals[k_] = max(
@@ -516,7 +583,9 @@ class Session:
         shared ring).  A sync call has no device queue, so its timeline is
         submit -> prepared -> inferred -> done."""
         marks.append(("done", time.perf_counter()))
-        streamed = decision is not None and decision.mode == "streamed"
+        streamed = decision is not None and decision.mode in (
+            "streamed", "sharded"
+        )
         self.obs.flights.record(record_from_marks(
             -next(self.obs.flight_ids), name, status, marks,
             cached=cached,

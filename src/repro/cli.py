@@ -35,6 +35,12 @@ def _session_args(ap: argparse.ArgumentParser) -> None:
                          "streams designs that exceed it")
     ap.add_argument("--stream-dtype", default=None,
                     help='staged edge-stream dtype (e.g. "bfloat16")')
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the streamed route across N mesh devices "
+                         "(repro.mesh); default: every visible device "
+                         "when more than one exists.  CPU hosts fake "
+                         "devices via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="journal streamed partition results under this "
                          "directory so a killed run can resume")
@@ -63,6 +69,7 @@ def _make_session(args):
         regrow_hops=args.hops,
         memory_budget_bytes=budget,
         stream_dtype=args.stream_dtype,
+        mesh_devices=getattr(args, "devices", None),
         trace=bool(getattr(args, "trace", None)),
         checkpoint_dir=getattr(args, "checkpoint_dir", None),
         resume=getattr(args, "resume", True),
@@ -91,8 +98,10 @@ def _resolve(spec: str):
 
 
 def _print_decision(label: str, d) -> None:
+    devices = f" devices={d.mesh_devices}" if d.mesh_devices > 1 else ""
     print(f"{label}: mode={d.mode} backend={d.backend} k={d.k} "
-          f"buckets={d.num_buckets}{list(d.buckets) if d.buckets else ''}")
+          f"buckets={d.num_buckets}{list(d.buckets) if d.buckets else ''}"
+          f"{devices}")
     print(f"    nodes={d.num_nodes} edges={d.num_edges} "
           f"modeled full={d.modeled_full_bytes/1e6:.1f} MB "
           f"peak={d.modeled_peak_bytes/1e6:.1f} MB "

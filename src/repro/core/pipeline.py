@@ -97,6 +97,10 @@ class PipelineConfig:
     # the staged stream bytes; kernels accumulate f32).  None defers to
     # ``gnn.stream_dtype``.
     stream_dtype: Optional[str] = None
+    # device-mesh sharding of the streamed route (repro.mesh).  None =
+    # auto: use every visible device when more than one exists; 1 forces
+    # the single-device executor; N shards across the first N devices.
+    mesh_devices: Optional[int] = None
     # crash-safe resume for streamed runs: when ``checkpoint_dir`` is set
     # (and the design has a structural hash), every launched partition's
     # core predictions are journaled atomically, and a re-run restores
@@ -409,13 +413,31 @@ def infer_streaming(
     backend = backend or prep.cfg.backend
     cfg = prep.cfg
     if executor is None:
-        # reused per (params, backend): repeated partitioned runs hit the
-        # same jit cache instead of retracing every bucket
-        executor = shared_executor(
-            params, backend, capacity=cfg.stream_capacity,
-            prefetch=cfg.stream_prefetch,
-            stream_dtype=_effective_stream_dtype(cfg),
-        )
+        devices = cfg.mesh_devices
+        if devices is None:
+            import jax
+
+            devices = jax.local_device_count()
+        if devices > 1:
+            # >1 visible device (or an explicit mesh_devices): shard the
+            # stream across the mesh data axis — same packed launches,
+            # same verdict, one journal
+            from repro.mesh import shared_mesh_executor
+
+            executor = shared_mesh_executor(
+                params, backend or "ref", num_devices=devices,
+                capacity=cfg.stream_capacity,
+                prefetch=cfg.stream_prefetch,
+                stream_dtype=_effective_stream_dtype(cfg),
+            )
+        else:
+            # reused per (params, backend): repeated partitioned runs hit
+            # the same jit cache instead of retracing every bucket
+            executor = shared_executor(
+                params, backend, capacity=cfg.stream_capacity,
+                prefetch=cfg.stream_prefetch,
+                stream_dtype=_effective_stream_dtype(cfg),
+            )
     if plan is None:
         plan = plan_from_subgraphs(
             list(prep.subgraphs), prep.num_nodes, num_edges=prep.num_edges,

@@ -49,6 +49,7 @@ SITES = (
     "io.parse",         # AIGER parsing (repro.io.aiger.loads)
     "exec.prefetch",    # streaming executor's host prefetch thread
     "exec.launch",      # streaming executor's packed device launch
+    "mesh.launch",      # sharded executor's per-device lane launch
     "service.prepare",  # service prepare-pool task
     "service.device",   # service device-worker pack/stream call
     "cache.load",       # result-cache / partition-journal load

@@ -1,5 +1,5 @@
 """Pallas flash attention (TPU target) — the kernel form of the lax-flash
-schedule in ``repro.models.attention``.
+schedule in ``repro.zoo.models.attention``.
 
 The roofline analysis (EXPERIMENTS.md §Roofline) shows the dominant
 memory-term contributor for every attention arch is the score stream the

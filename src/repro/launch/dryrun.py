@@ -11,8 +11,8 @@ from pathlib import Path  # noqa: E402
 
 import jax           # noqa: E402
 
-from repro.configs import ARCHS, LM_ARCHS, get_config          # noqa: E402
-from repro.configs.shapes import SHAPES, supported_shapes       # noqa: E402
+from repro.zoo.configs import ARCHS, LM_ARCHS, get_config          # noqa: E402
+from repro.zoo.configs.shapes import SHAPES, supported_shapes       # noqa: E402
 from repro.launch.mesh import make_production_mesh              # noqa: E402
 from repro.launch.steps import GROOT_SHAPES, build_cell, build_groot_cell  # noqa: E402
 from repro.roofline import hlo as hlo_mod                       # noqa: E402

@@ -8,7 +8,14 @@ a pod's ICI).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+import numpy as np
+
+
+class MeshConfigError(ValueError):
+    """The requested mesh shape cannot be built from the visible devices."""
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,8 +24,26 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model: int = 1):
-    """Small mesh over whatever devices exist (tests / examples)."""
+def make_host_mesh(model: int = 1, *, data: Optional[int] = None):
+    """Small mesh over whatever devices exist (tests / examples).
+
+    ``data`` caps the data axis to fewer shards than the visible devices
+    allow — a test on an 8-device host can ask for a 2-way mesh.
+    """
     n = len(jax.devices())
-    assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"))
+    if model < 1 or n % model:
+        raise MeshConfigError(
+            f"model axis {model} does not divide the {n} visible devices"
+        )
+    max_data = n // model
+    if data is None:
+        data = max_data
+    if data < 1 or data > max_data:
+        raise MeshConfigError(
+            f"data axis {data} out of range: {n} devices / model={model} "
+            f"admit at most {max_data} data shards"
+        )
+    devices = jax.devices()[: data * model]
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(data, model), ("data", "model")
+    )

@@ -23,9 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.configs.base import materialize, model_spec_tree
-from repro.serving.decode import make_prefill_step, make_serve_step
+from repro.zoo.configs import get_config
+from repro.zoo.configs.base import materialize, model_spec_tree
+from repro.zoo.serving.decode import make_prefill_step, make_serve_step
 
 
 @dataclasses.dataclass

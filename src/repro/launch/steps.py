@@ -24,10 +24,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, abstract, model_spec_tree
-from repro.configs.shapes import SHAPES, input_specs
-from repro.models.transformer import init_cache_tree
-from repro.serving.decode import make_prefill_step, make_serve_step
+from repro.zoo.configs.base import ModelConfig, abstract, model_spec_tree
+from repro.zoo.configs.shapes import SHAPES, input_specs
+from repro.zoo.models.transformer import init_cache_tree
+from repro.zoo.serving.decode import make_prefill_step, make_serve_step
 from repro.sharding.rules import make_rules, partition_spec, tree_shardings
 from repro.training import optimizer as opt_mod
 from repro.training.train_step import make_train_step

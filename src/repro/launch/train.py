@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.configs.base import materialize, model_spec_tree
+from repro.zoo.configs import get_config
+from repro.zoo.configs.base import materialize, model_spec_tree
 from repro.distributed.fault_tolerance import ResilientLoop
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.sharding.rules import make_rules, tree_shardings, use_sharding

@@ -1,0 +1,168 @@
+"""The device side of sharded streaming: one wave = one mesh launch.
+
+:class:`MeshRunner` executes :class:`~repro.mesh.plan.Wave`\\ s over the
+data axis of :func:`repro.launch.mesh.make_host_mesh`:
+
+  * **SPMD** (shape-stable backends, "ref"/"onehot"): the wave's per-lane
+    packed arrays are stacked on a leading device axis and dispatched
+    through ONE ``jax.pmap`` program — params replicated (``in_axes
+    None``), padded shapes static — so the whole mesh shares a single
+    compile unit per (bucket, capacity), exactly the single-device
+    compile discipline.  Idle lanes are filled with a sibling's arrays
+    (their outputs are discarded); the executable never sees a partial
+    wave, so the trace count stays at most ``num_buckets`` TOTAL.
+
+  * **MPMD** (structure-keyed ``groot*`` backends): each lane's degree
+    plan is a static jit constant (an :func:`~repro.kernels.ops.make_agg_pair`
+    pair), so lanes cannot share one SPMD program.  Instead params are
+    replicated host-side onto every lane device once, each lane's arrays
+    are committed to its device, and all lanes are dispatched
+    asynchronously before any result is read back — JAX's async dispatch
+    overlaps the per-device executions, MPMD-style.
+
+Both paths return per-lane int32 predictions for the caller's
+core-prediction scatter; partitions never cross lanes (GROOT Alg. 1
+independence), so no collective beyond the implicit pmap gang exists.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gnn
+from repro.kernels import ops
+from repro.launch.mesh import MeshConfigError, make_host_mesh
+from repro.obs import REGISTRY
+from repro.service.scheduler import (
+    SHAPE_STABLE_BACKENDS,
+    STRUCTURE_KEYED_BACKENDS,
+)
+
+
+class MeshRunner:
+    """Replicated-params wave launcher over ``num_devices`` mesh lanes."""
+
+    def __init__(self, params, backend: str = "ref", *,
+                 num_devices: Optional[int] = None,
+                 stream_dtype: Optional[str] = None):
+        if backend not in SHAPE_STABLE_BACKENDS + STRUCTURE_KEYED_BACKENDS:
+            raise ValueError(
+                f"mesh backend must be one of {SHAPE_STABLE_BACKENDS} or "
+                f"{STRUCTURE_KEYED_BACKENDS}, got {backend!r}"
+            )
+        visible = jax.local_device_count()
+        if num_devices is None:
+            num_devices = visible
+        if num_devices < 1 or num_devices > visible:
+            raise MeshConfigError(
+                f"mesh_devices={num_devices} out of range: "
+                f"{visible} device(s) visible"
+            )
+        #: the data axis of the host mesh — lane d owns devices[d]
+        self.mesh = make_host_mesh(data=num_devices)
+        self.devices = list(self.mesh.devices.ravel())
+        self.num_devices = num_devices
+        self._backend = backend
+        self._stream_dtype = stream_dtype
+        self._spmd = backend in SHAPE_STABLE_BACKENDS
+        self.compile_count = 0
+        self.run_count = 0          # wave launches
+        self.lane_run_count = 0     # per-lane launches (<= waves * devices)
+        self._lock = threading.Lock()
+
+        self._params = jax.tree_util.tree_map(jnp.asarray, params)
+
+        def _fwd(params, x, edge_src, edge_dst, edge_inv, edge_slot,
+                 num_nodes, agg):
+            # executes at trace time only: one increment per compilation
+            self.compile_count += 1
+            REGISTRY.counter("mesh.runner_compiles").inc()
+            if agg is None and self._backend == "onehot":
+                agg = ops.make_agg_pair(edge_src, edge_dst, num_nodes, "onehot")
+            logits = gnn.forward(
+                params, x, edge_src, edge_dst, edge_inv, edge_slot,
+                num_nodes=num_nodes, agg=agg,
+                stream_dtype=self._stream_dtype,
+            )
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        if self._spmd:
+            # one program, all lanes: agg is resolved inside the trace, so
+            # only (params, arrays..., static num_nodes) cross the boundary
+            def _fwd_spmd(params, x, es, ed, ei, esl, num_nodes):
+                return _fwd(params, x, es, ed, ei, esl, num_nodes, None)
+
+            self._pmap = jax.pmap(
+                _fwd_spmd,
+                in_axes=(None, 0, 0, 0, 0, 0),
+                static_broadcasted_argnums=6,
+                devices=self.devices,
+            )
+        else:
+            # MPMD: params replicated once per lane device; each lane's
+            # agg pair is a static jit constant keyed by packed structure
+            self._jit = jax.jit(_fwd, static_argnames=("num_nodes", "agg"))
+            self._lane_params = [
+                jax.tree_util.tree_map(
+                    lambda a, d=dev: jax.device_put(a, d), self._params
+                )
+                for dev in self.devices
+            ]
+
+    def launch_wave(self, batches: list) -> list:
+        """Run one wave: ``batches[d]`` is lane *d*'s packed-array dict or
+        None for an idle lane.  Returns per-lane ``np.ndarray`` predictions
+        (None where the lane idled)."""
+        assert len(batches) == self.num_devices
+        active = [d for d, b in enumerate(batches) if b is not None]
+        if not active:
+            return [None] * self.num_devices
+        with self._lock:
+            self.run_count += 1
+            self.lane_run_count += len(active)
+            if self._spmd:
+                return self._launch_spmd(batches, active)
+            return self._launch_mpmd(batches, active)
+
+    def _launch_spmd(self, batches: list, active: list) -> list:
+        filler = batches[active[0]]
+        full = [b if b is not None else filler for b in batches]
+        stacked = [
+            np.stack([b[key] for b in full])
+            for key in ("x", "edge_src", "edge_dst", "edge_inv", "edge_slot")
+        ]
+        num_nodes = full[0]["num_nodes"]
+        pred = np.asarray(self._pmap(self._params, *stacked, num_nodes))
+        return [
+            pred[d] if batches[d] is not None else None
+            for d in range(self.num_devices)
+        ]
+
+    def _launch_mpmd(self, batches: list, active: list) -> list:
+        # dispatch every lane before blocking on any readback: jax queues
+        # the executions asynchronously, so the devices overlap
+        futures: dict = {}
+        for d in active:
+            b = batches[d]
+            agg = ops.make_agg_pair(
+                b["edge_src"], b["edge_dst"], b["num_nodes"], self._backend
+            )
+            dev = self.devices[d]
+            staged = {
+                key: jax.device_put(b[key], dev)
+                for key in ("x", "edge_src", "edge_dst", "edge_inv",
+                            "edge_slot")
+            }
+            futures[d] = self._jit(
+                self._lane_params[d], staged["x"], staged["edge_src"],
+                staged["edge_dst"], staged["edge_inv"], staged["edge_slot"],
+                num_nodes=b["num_nodes"], agg=agg,
+            )
+        return [
+            np.asarray(futures[d]) if d in futures else None
+            for d in range(self.num_devices)
+        ]

@@ -23,8 +23,8 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.configs import ARCHS, get_config
-from repro.configs.shapes import SHAPES
+from repro.zoo.configs import ARCHS, get_config
+from repro.zoo.configs.shapes import SHAPES
 
 PEAK_FLOPS = 197e12       # bf16 / chip
 HBM_BW = 819e9            # bytes/s

@@ -2,7 +2,7 @@
 
 Model code annotates activations with *logical* axes (``batch``, ``seq``,
 ``heads`` ...); parameters carry logical axes in their
-:class:`repro.configs.base.ParamSpec`.  This module maps them onto the
+:class:`repro.zoo.configs.base.ParamSpec`.  This module maps them onto the
 production mesh:
 
   single pod:  (16, 16)    axes ("data", "model")
@@ -102,7 +102,7 @@ def sharding_for_spec(spec, mesh: Mesh, rules: dict) -> NamedSharding:
 
 def tree_shardings(spec_tree, mesh: Mesh, rules: dict):
     """NamedSharding tree matching a ParamSpec tree."""
-    from repro.configs.base import ParamSpec
+    from repro.zoo.configs.base import ParamSpec
 
     return jax.tree.map(
         lambda s: sharding_for_spec(s, mesh, rules),

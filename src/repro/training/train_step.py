@@ -21,8 +21,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
-from repro.models.transformer import model_forward
+from repro.zoo.configs.base import ModelConfig
+from repro.zoo.models.transformer import model_forward
 from repro.sharding import shard
 from repro.training import optimizer as opt_mod
 
@@ -52,7 +52,7 @@ def make_train_step(
     remat: bool = True,
     remat_group: int = 1,
 ):
-    from repro.configs.base import model_spec_tree
+    from repro.zoo.configs.base import model_spec_tree
 
     spec_tree = model_spec_tree(cfg)
 

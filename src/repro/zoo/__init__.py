@@ -1,0 +1,14 @@
+"""`repro.zoo`: quarantined LLM-era scaffolding, OFF the verification path.
+
+The repo grew from a generic JAX serving/training skeleton; the
+transformer model zoo (``zoo.models``), its architecture registry
+(``zoo.configs`` — deepseek/llama/qwen/... plus the ``groot_gnn`` entry
+that bridges back), and the decode-serving loop (``zoo.serving``) are
+exercised only by the LM launchers (``repro.launch``), the roofline
+reports, and their tests.  Nothing under ``repro.core`` / ``repro.exec``
+/ ``repro.mesh`` / ``repro.api`` imports this namespace, so the GROOT
+verification stack never drags transformer code — in particular,
+``repro.mesh``'s use of :mod:`repro.sharding.rules` stays free of model
+imports (the rules module only reaches into the zoo lazily, for
+ParamSpec-annotated trees the zoo itself produced).
+"""

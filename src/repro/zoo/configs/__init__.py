@@ -1,5 +1,5 @@
 """Architecture registry: --arch <id> resolution for launcher/dryrun."""
-from repro.configs import (
+from repro.zoo.configs import (
     deepseek_67b,
     gemma2_9b,
     groot_gnn,

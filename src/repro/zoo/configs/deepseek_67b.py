@@ -2,7 +2,7 @@
 vocab=102400 — llama-arch.  [arXiv:2401.02954; hf]"""
 import dataclasses
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 ARCH_ID = "deepseek-67b"
 

@@ -3,7 +3,7 @@ vocab=256000 — local+global alternating, logit softcap.
 [arXiv:2408.00118; hf]"""
 import dataclasses
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 ARCH_ID = "gemma2-9b"
 

@@ -7,7 +7,7 @@ precomputed (B, 1601, d_model) patch embeddings (projector output).
 """
 import dataclasses
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 ARCH_ID = "llama-3.2-vision-11b"
 

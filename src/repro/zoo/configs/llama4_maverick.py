@@ -8,7 +8,7 @@ MoE every 2nd layer (interleave_moe_layer_step=2), which reproduces the
 """
 import dataclasses
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 ARCH_ID = "llama4-maverick-400b-a17b"
 

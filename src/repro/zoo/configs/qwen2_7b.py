@@ -2,7 +2,7 @@
 vocab=152064 — GQA, QKV bias.  [arXiv:2407.10671; hf]"""
 import dataclasses
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 ARCH_ID = "qwen2-7b"
 

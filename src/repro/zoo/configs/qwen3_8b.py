@@ -2,7 +2,7 @@
 vocab=151936 — qk_norm, GQA.  [hf:Qwen/Qwen3-8B; hf]"""
 import dataclasses
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 ARCH_ID = "qwen3-8b"
 

@@ -2,7 +2,7 @@
 vocab=151936, MoE 128e top-8.  [hf:Qwen/Qwen3-30B-A3B; hf]"""
 import dataclasses
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 ARCH_ID = "qwen3-moe-235b-a22b"
 

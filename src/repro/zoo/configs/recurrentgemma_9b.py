@@ -7,7 +7,7 @@ by the 2048 window.
 """
 import dataclasses
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 ARCH_ID = "recurrentgemma-9b"
 

@@ -7,7 +7,7 @@ no sparse adjacency).
 """
 import dataclasses
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 ARCH_ID = "rwkv6-3b"
 

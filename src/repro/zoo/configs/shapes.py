@@ -13,7 +13,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +55,7 @@ def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
     elif sh.kind == "prefill":
         specs = {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
     else:  # decode: one new token against a cache of seq_len
-        from repro.models.transformer import init_cache_tree
+        from repro.zoo.models.transformer import init_cache_tree
 
         cache = jax.eval_shape(
             lambda: init_cache_tree(cfg, b, s, dtype=jnp.bfloat16)

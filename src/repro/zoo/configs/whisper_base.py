@@ -8,7 +8,7 @@ decode shapes exercise the backbone, so the positional range is extended.
 """
 import dataclasses
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 ARCH_ID = "whisper-base"
 

@@ -24,8 +24,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
-from repro.models.layers import rms_norm, rope, softcap
+from repro.zoo.configs.base import ModelConfig
+from repro.zoo.models.layers import rms_norm, rope, softcap
 from repro.sharding import current_ctx, shard
 
 

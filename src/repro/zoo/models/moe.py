@@ -18,8 +18,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
-from repro.models.layers import mlp
+from repro.zoo.configs.base import ModelConfig
+from repro.zoo.models.layers import mlp
 from repro.sharding import shard
 
 

@@ -23,7 +23,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 C_EXP = 8.0
 

@@ -32,7 +32,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.zoo.configs.base import ModelConfig
 
 LOGW_FLOOR = -8.0
 

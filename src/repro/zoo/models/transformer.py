@@ -29,18 +29,18 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
-from repro.models import rglru as rglru_mod
-from repro.models import rwkv6
-from repro.models.attention import (
+from repro.zoo.configs.base import ModelConfig
+from repro.zoo.models import rglru as rglru_mod
+from repro.zoo.models import rwkv6
+from repro.zoo.models.attention import (
     KVCache,
     attention,
     cross_attention,
     encode_cross_kv,
     init_cache,
 )
-from repro.models.layers import mlp, rms_norm, softcap
-from repro.models.moe import moe_apply
+from repro.zoo.models.layers import mlp, rms_norm, softcap
+from repro.zoo.models.moe import moe_apply
 from repro.sharding import shard
 
 

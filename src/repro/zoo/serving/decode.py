@@ -13,8 +13,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
-from repro.models.transformer import init_cache_tree, model_forward
+from repro.zoo.configs.base import ModelConfig
+from repro.zoo.models.transformer import init_cache_tree, model_forward
 
 
 def make_prefill_step(cfg: ModelConfig, max_seq: int):

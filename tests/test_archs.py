@@ -14,10 +14,10 @@ import pytest
 
 pytestmark = pytest.mark.slow  # ~40 s of per-arch compiles; full-lane only
 
-from repro.configs import ARCHS, LM_ARCHS, get_config
-from repro.configs.base import abstract, materialize, model_spec_tree, param_tree
-from repro.configs.shapes import SHAPES, input_specs, supported_shapes
-from repro.models.transformer import init_cache_tree, model_forward
+from repro.zoo.configs import ARCHS, LM_ARCHS, get_config
+from repro.zoo.configs.base import abstract, materialize, model_spec_tree, param_tree
+from repro.zoo.configs.shapes import SHAPES, input_specs, supported_shapes
+from repro.zoo.models.transformer import init_cache_tree, model_forward
 from repro.training import optimizer as opt_mod
 from repro.training.train_step import make_train_step
 

@@ -2,8 +2,8 @@
 the brief's 40 LM cells (skips per DESIGN.md), plus the groot cells."""
 from __future__ import annotations
 
-from repro.configs import ARCHS, LM_ARCHS, get_config
-from repro.configs.shapes import SHAPES, supported_shapes
+from repro.zoo.configs import ARCHS, LM_ARCHS, get_config
+from repro.zoo.configs.shapes import SHAPES, supported_shapes
 
 
 def test_lm_cell_matrix():

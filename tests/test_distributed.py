@@ -41,8 +41,8 @@ def test_sharded_train_step_matches_single_device():
     the unsharded step produce the same loss and parameter update."""
     run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.configs import get_config
-        from repro.configs.base import materialize, model_spec_tree
+        from repro.zoo.configs import get_config
+        from repro.zoo.configs.base import materialize, model_spec_tree
         from repro.sharding.rules import make_rules, tree_shardings, use_sharding
         from repro.training import optimizer as opt_mod
         from repro.training.train_step import make_train_step
@@ -78,9 +78,9 @@ def test_shard_map_moe_matches_dense_path():
     """moe_ffn_dist (shard_map EP) == moe_ffn (single-device reference)."""
     run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
-        from repro.configs import get_config
-        from repro.configs.base import materialize, param_tree
-        from repro.models.moe import moe_ffn, moe_ffn_dist
+        from repro.zoo.configs import get_config
+        from repro.zoo.configs.base import materialize, param_tree
+        from repro.zoo.models.moe import moe_ffn, moe_ffn_dist
         from repro.sharding.rules import use_sharding
 
         cfg = dataclasses.replace(
@@ -187,7 +187,7 @@ def test_dryrun_cell_compiles_on_tiny_mesh():
     the same path the 512-chip run takes, runnable in CI."""
     run_subprocess("""
         import jax
-        from repro.configs import get_config
+        from repro.zoo.configs import get_config
         from repro.launch.steps import build_cell
         from repro.launch.dryrun import run_cell
         from jax.sharding import Mesh
@@ -198,7 +198,7 @@ def test_dryrun_cell_compiles_on_tiny_mesh():
         cfg = get_config("qwen3-8b", smoke=True)
         import dataclasses
         # shrink the shape grid to smoke scale by monkeypatching SHAPES
-        from repro.configs import shapes as S
+        from repro.zoo.configs import shapes as S
         small = {"train_4k": S.ShapeSpec("train_4k", 64, 8, "train"),
                  "decode_32k": S.ShapeSpec("decode_32k", 64, 8, "decode")}
         S.SHAPES.clear(); S.SHAPES.update(small)

@@ -61,9 +61,9 @@ def test_flash_bf16():
 def test_flash_matches_model_sdpa():
     """The kernel and the model's lax-flash schedule agree (same math the
     dry-run lowers; the kernel is the TPU deployment form)."""
-    import repro.models.attention as A
-    from repro.configs import get_config
-    from repro.configs.base import materialize, param_tree
+    import repro.zoo.models.attention as A
+    from repro.zoo.configs import get_config
+    from repro.zoo.configs.base import materialize, param_tree
 
     cfg = get_config("qwen3-8b", smoke=True)
     p = materialize(param_tree(cfg)["layers"][0]["attn"], jax.random.key(7),

@@ -6,12 +6,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.models.attention as A
-from repro.configs import get_config
-from repro.configs.base import materialize, param_tree
-from repro.models import rglru, rwkv6
-from repro.models.attention import attention
-from repro.models.moe import capacity, moe_ffn, route
+import repro.zoo.models.attention as A
+from repro.zoo.configs import get_config
+from repro.zoo.configs.base import materialize, param_tree
+from repro.zoo.models import rglru, rwkv6
+from repro.zoo.models.attention import attention
+from repro.zoo.models.moe import capacity, moe_ffn, route
 
 
 def _mat(spec, seed=0):
